@@ -1,0 +1,63 @@
+"""Figure 12: Pearson correlation between pairwise gradient (sketch)
+similarity and pairwise data similarity across training rounds — the
+signal that determines the clustering start time (paper §4.4)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import build, default_fl, emit
+from repro.fl.engine import AuxoEngine
+from repro.fl import AuxoConfig
+
+
+def _pairwise_data_similarity(pop, ids):
+    """Cosine similarity of client label+feature moment vectors."""
+    feats = []
+    for c in ids:
+        cl = pop.clients[c]
+        hist = np.bincount(cl.y, minlength=pop.n_classes) / len(cl.y)
+        mean = cl.x.mean(0)
+        feats.append(np.concatenate([hist * 3.0, mean / (np.linalg.norm(mean) + 1e-9)]))
+    F = np.stack(feats)
+    F = F - F.mean(0)
+    F /= np.linalg.norm(F, axis=1, keepdims=True) + 1e-9
+    return F @ F.T
+
+
+def run(rounds: int = 60):
+    task, pop = build("openimage-like")
+    fl = default_fl(rounds, use_availability=False)
+    eng = AuxoEngine(task, pop, fl, AuxoConfig(enabled=False, d_sketch=128))
+    ids = list(range(150))
+    D = _pairwise_data_similarity(pop, ids)
+    iu = np.triu_indices(len(ids), k=1)
+
+    rows = []
+    for r in range(rounds):
+        eng.step(r)
+        if r % max(1, rounds // 8) != 0:
+            continue
+        cm = eng.cohorts["0"]
+        xs, ys = [], []
+        for c in ids:
+            x, y = pop.sample_batch(c, fl.batch_size, fl.local_steps, eng.rng)
+            xs.append(x)
+            ys.append(y)
+        keys = jax.random.split(jax.random.key(r), len(ids))
+        deltas, _ = eng._vmapped_train(
+            cm.params, jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys)), keys
+        )
+        sk = np.asarray(eng._vmapped_sketch(deltas))
+        sk = sk - sk.mean(0)
+        sk /= np.linalg.norm(sk, axis=1, keepdims=True) + 1e-9
+        G = sk @ sk.T
+        r_pearson = np.corrcoef(G[iu], D[iu])[0, 1]
+        rows.append(dict(round=r, pearson_r=float(r_pearson)))
+    emit(rows, "Figure 12: gradient/data similarity correlation")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs jnp oracle — correctness at
+scale + host-side timing of the oracle (the TPU path is the BlockSpec'd
+kernel; on CPU we report oracle timing as the reference cost)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    rows = []
+    key = jax.random.key(0)
+    for (P, D, K) in [(1024, 256, 8), (4096, 256, 16), (8192, 512, 32)]:
+        x = jax.random.normal(jax.random.fold_in(key, P), (P, D))
+        c = jax.random.normal(jax.random.fold_in(key, D), (K, D))
+        ids = jax.random.randint(jax.random.fold_in(key, 7), (P,), 0, K)
+        got = ops.cosine_similarity(x, c)
+        want = ref.cosine_similarity(x, c)
+        err = float(jnp.max(jnp.abs(got - want)))
+        oracle_us = _time(jax.jit(ref.cosine_similarity), x, c)
+        rows.append(dict(kernel="cosine_sim", P=P, D=D, K=K,
+                         max_err=err, oracle_us=oracle_us))
+        got2 = ops.segment_aggregate(x, ids, K)
+        want2 = ref.segment_aggregate(x, ids, K)
+        err2 = float(jnp.max(jnp.abs(got2 - want2)))
+        oracle2_us = _time(jax.jit(lambda a, b: ref.segment_aggregate(a, b, K)), x, ids)
+        rows.append(dict(kernel="segment_aggregate", P=P, D=D, K=K,
+                         max_err=err2, oracle_us=oracle2_us))
+    emit(rows, "Kernel microbenchmarks")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""§Roofline aggregation: reads experiments/dryrun/*.json and renders the
+per-(arch × shape) roofline table (markdown + CSV)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import List
+
+DRYRUN_DIR = Path("experiments/dryrun")
+
+
+def load(tag_filter: str = "") -> List[dict]:
+    rows = []
+    for f in sorted(DRYRUN_DIR.glob("*.json")):
+        d = json.loads(f.read_text())
+        if tag_filter and d.get("tag") != tag_filter:
+            continue
+        if not tag_filter and d.get("tag"):
+            continue  # default view = untagged baselines
+        rows.append(d)
+    return rows
+
+
+def render(rows: List[dict]) -> str:
+    hdr = (
+        "| arch | shape | mesh | policy | compute (ms) | memory (ms) | "
+        "collective (ms) | bottleneck | MODEL/HLO flops | temp GB/dev |\n"
+        "|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    lines = []
+    for d in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        r = d["roofline"]
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} | {d['policy']} "
+            f"| {r['compute_s']*1e3:.2f} | {r['memory_s']*1e3:.2f} "
+            f"| {r['collective_s']*1e3:.2f} | {r['bottleneck']} "
+            f"| {d['useful_flops_ratio']:.2f} "
+            f"| {d['memory'].get('temp_size_in_bytes', 0)/1e9:.2f} |"
+        )
+    return hdr + "\n".join(lines)
+
+
+def run():
+    rows = load()
+    if not rows:
+        print("no dry-run artifacts found — run: python -m repro.launch.dryrun --all")
+        return []
+    print(render(rows))
+    out = []
+    for d in rows:
+        r = d["roofline"]
+        out.append(
+            dict(
+                arch=d["arch"], shape=d["shape"], mesh=d["mesh"],
+                compute_ms=r["compute_s"] * 1e3, memory_ms=r["memory_s"] * 1e3,
+                collective_ms=r["collective_s"] * 1e3, bottleneck=r["bottleneck"],
+            )
+        )
+    return out
+
+
+if __name__ == "__main__":
+    run()

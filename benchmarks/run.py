@@ -1,0 +1,60 @@
+"""Benchmark entry point: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # smoke (fast) pass
+  PYTHONPATH=src python -m benchmarks.run --full     # paper-scale rounds
+  PYTHONPATH=src python -m benchmarks.run --only table3_tta
+
+Every module prints a CSV block; roofline reads experiments/dryrun/*.json
+produced by repro.launch.dryrun.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale rounds")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    rounds = 120 if args.full else 60
+    from benchmarks import (
+        fig10_algorithms,
+        fig12_correlation,
+        fig13_sensitivity,
+        fig14_resilience,
+        kernels_micro,
+        roofline,
+        table3_tta,
+        table4_bias,
+        table5_clustered_fl,
+    )
+
+    suites = {
+        "kernels_micro": lambda: kernels_micro.run(),
+        "table3_tta": lambda: table3_tta.run(
+            rounds, scenarios=None if args.full else ["openimage-like", "femnist-like", "reddit-like"]
+        ),
+        "fig10_algorithms": lambda: fig10_algorithms.run(rounds),
+        "table4_bias": lambda: table4_bias.run(
+            rounds, scenarios=None if args.full else ["openimage-like", "femnist-like"]
+        ),
+        "table5_clustered_fl": lambda: table5_clustered_fl.run(max(40, rounds // 2)),
+        "fig12_correlation": lambda: fig12_correlation.run(max(40, rounds // 2)),
+        "fig13_sensitivity": lambda: fig13_sensitivity.run(max(40, rounds // 2)),
+        "fig14_resilience": lambda: fig14_resilience.run(max(40, rounds // 2)),
+        "roofline": lambda: roofline.run(),
+    }
+    if args.only:
+        suites = {args.only: suites[args.only]}
+
+    for name, fn in suites.items():
+        t0 = time.time()
+        fn()
+        print(f"[{name}: {time.time()-t0:.0f}s]", flush=True)
+
+
+if __name__ == "__main__":
+    main()

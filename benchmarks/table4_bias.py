@@ -1,0 +1,30 @@
+"""Table 4: model bias — worst/best 10% client accuracy and variance."""
+from __future__ import annotations
+
+from benchmarks.common import SCENARIOS, build, default_auxo, default_fl, emit
+from repro.fl import run_auxo, run_fl
+
+
+def run(rounds: int = 100, scenarios=None):
+    rows = []
+    for name in scenarios or ["openimage-like", "femnist-like", "speech-like", "amazon-like"]:
+        task, pop = build(name)
+        fl = default_fl(rounds)
+        base = run_fl(task, pop, fl)
+        _, hist = run_auxo(task, pop, fl, default_auxo(rounds))
+        for setting, h in (("auxo", hist[-1]), ("baseline", base[-1])):
+            rows.append(
+                dict(
+                    dataset=name,
+                    setting=setting,
+                    worst10=h["acc_worst10"],
+                    best10=h["acc_best10"],
+                    variance=h["acc_var"],
+                )
+            )
+    emit(rows, "Table 4: model bias")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Quickstart: Auxo cohort discovery on a conflicting-concept population.
+
+Runs in ~1 minute on CPU. Four latent client groups share features but hold
+conflicting label concepts; a single global model caps out, Auxo discovers
+the cohorts from gradient sketches and trains one model per cohort.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.data import make_population
+from repro.fl import AuxoConfig, FLConfig, run_auxo, run_fl
+from repro.fl.task import MLPTask
+
+
+def main():
+    pop = make_population(
+        n_clients=600,
+        n_groups=2,
+        group_sep=0.0,
+        dirichlet=2.0,
+        label_conflict=0.6,
+        seed=0,
+    )
+    task = MLPTask(dim=pop.dim, n_classes=pop.n_classes)
+    fl = FLConfig(rounds=50, participants_per_round=80, eval_every=10, seed=0,
+                  use_availability=False)
+
+    print("== cohort-agnostic FedYoGi baseline ==")
+    base = run_fl(task, pop, fl)
+    for h in base:
+        print(f"  round {h['round']:3d}  acc {h['acc_mean']:.3f}  (1 global model)")
+
+    print("== Auxo ==")
+    eng, hist = run_auxo(
+        task, pop, fl,
+        AuxoConfig(d_sketch=64, cluster_k=2, max_cohorts=2,
+                   clustering_start_frac=0.05, partition_start_frac=0.1,
+                   min_members=8),
+    )
+    for h in hist:
+        print(f"  round {h['round']:3d}  acc {h['acc_mean']:.3f}  cohorts={h['n_cohorts']}")
+
+    groups = pop.client_groups()
+    assign = np.array([eng.client_cohort(c) for c in range(pop.n_clients)])
+    print("\ncohort composition (latent group -> count):")
+    for leaf in sorted(set(assign)):
+        g = groups[assign == leaf]
+        print(f"  cohort {leaf}: {np.bincount(g, minlength=pop.n_groups).tolist()}")
+    gain = hist[-1]["acc_mean"] - base[-1]["acc_mean"]
+    print(f"\nfinal accuracy: baseline {base[-1]['acc_mean']:.3f} -> "
+          f"auxo {hist[-1]['acc_mean']:.3f}  (+{gain:.3f})")
+
+
+if __name__ == "__main__":
+    main()

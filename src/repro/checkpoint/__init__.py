@@ -1,0 +1,10 @@
+"""Checkpointing for cohort fault tolerance (paper §5.2).
+
+Pure numpy .npz per pytree (flattened with keystr paths) — no external
+dependency, works for params, optimizer state, and clustering state. The
+coordinator's own soft state has a separate pickle checkpoint
+(repro.core.coordinator.CohortCoordinator.checkpoint).
+"""
+from repro.checkpoint.npz import load_pytree, save_pytree
+
+__all__ = ["save_pytree", "load_pytree"]

@@ -1,0 +1,33 @@
+"""Flat-keyed npz pytree checkpointing."""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def save_pytree(path: str | Path, tree: Any):
+    flat = jax.tree_util.tree_leaves_with_path(tree)
+    arrays = {jax.tree_util.keystr(p): np.asarray(l) for p, l in flat}
+    np.savez(path, **arrays)
+
+
+def load_pytree(path: str | Path, like: Any) -> Any:
+    """Restore into the structure of `like` (keys must match)."""
+    data = np.load(path, allow_pickle=False)
+    flat = jax.tree_util.tree_leaves_with_path(like)
+    leaves = []
+    for p, l in flat:
+        k = jax.tree_util.keystr(p)
+        if k not in data:
+            raise KeyError(f"checkpoint missing {k}")
+        arr = data[k]
+        if tuple(arr.shape) != tuple(l.shape):
+            raise ValueError(f"shape mismatch for {k}: {arr.shape} vs {l.shape}")
+        leaves.append(jnp.asarray(arr, dtype=l.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), leaves
+    )

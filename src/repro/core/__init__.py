@@ -1,0 +1,28 @@
+"""Auxo core: scalable client clustering for federated learning.
+
+The paper's contribution (SoCC '23): online gradient-based cohort
+identification (clustering.py), reward-based eps-greedy cohort selection with
+hierarchical reward propagation (selection.py), the cohort tree and affinity
+messages (cohort.py), the Lemma-4.1 partition criteria (criteria.py), and the
+cohort coordinator (coordinator.py).
+"""
+from repro.core.clustering import ClusterState, OnlineClustering
+from repro.core.cohort import AffinityMessage, CohortTree, tree_distance
+from repro.core.coordinator import CohortCoordinator
+from repro.core.criteria import PartitionCriteria
+from repro.core.selection import CohortSelector, instant_reward, update_rewards
+from repro.core.sketch import GradientSketcher
+
+__all__ = [
+    "ClusterState",
+    "OnlineClustering",
+    "AffinityMessage",
+    "CohortTree",
+    "tree_distance",
+    "CohortCoordinator",
+    "PartitionCriteria",
+    "CohortSelector",
+    "instant_reward",
+    "update_rewards",
+    "GradientSketcher",
+]

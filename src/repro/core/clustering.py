@@ -1,0 +1,244 @@
+"""Online gradient clustering (paper §4.2, Algorithm 1 lines 13–19).
+
+Per cohort, per round: the first clustering round runs K-means on that
+round's participant gradient sketches to initialize cluster prototypes;
+every later round assigns the round's participants to the nearest prototype
+by cosine similarity and refreshes prototypes with an EMA over newly
+assigned gradients. Gradients are only comparable *within* a round (they
+depend on the round's model weights), so prototypes live in *normalized*
+gradient space and the EMA re-anchors them every round — this is what makes
+mini-batch clustering feasible without absolute centroids.
+
+All hot math is jit-compiled; the Pallas kernels in repro/kernels supply the
+cosine-similarity and segment-aggregation primitives on TPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+
+
+def _normalize(x, eps=1e-8):
+    return x / (jnp.linalg.norm(x, axis=-1, keepdims=True) + eps)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ClusterState:
+    """Per-cohort clustering state (a small pytree, checkpointable)."""
+
+    centroids: jnp.ndarray  # (K, d) unit-norm prototypes
+    counts: jnp.ndarray  # (K,) cumulative assignment counts
+    round_counts: jnp.ndarray  # (K,) EMA of per-round assignment counts
+    dispersion: jnp.ndarray  # () EMA of mean (1 - cos to own prototype)
+    margin: jnp.ndarray  # () EMA of (cos to own) - (cos to best other): separation
+    cluster_dispersion: jnp.ndarray  # (K,) per-cluster dispersion EMA
+    initialized: jnp.ndarray  # () bool
+    round: jnp.ndarray  # () int32 rounds of clustering performed
+
+    @staticmethod
+    def create(k: int, d: int) -> "ClusterState":
+        return ClusterState(
+            centroids=jnp.zeros((k, d), jnp.float32),
+            counts=jnp.zeros((k,), jnp.float32),
+            round_counts=jnp.zeros((k,), jnp.float32),
+            dispersion=jnp.ones((), jnp.float32),
+            margin=jnp.zeros((), jnp.float32),
+            cluster_dispersion=jnp.ones((k,), jnp.float32),
+            initialized=jnp.zeros((), bool),
+            round=jnp.zeros((), jnp.int32),
+        )
+
+
+@partial(jax.jit, static_argnames=("k", "iters", "restarts"))
+def kmeans_cosine(key, sketches: jnp.ndarray, k: int, iters: int = 10, mask=None,
+                  restarts: int = 4):
+    """Spherical k-means (cosine) on one round's sketches. (P,d) -> (K,d).
+
+    mask: optional (P,) validity weights (padded engine batches).
+    Runs `restarts` seedings and keeps the solution with the highest mean
+    cosine to the assigned prototype (k-means is seed-sensitive on noisy
+    gradient sketches).
+    """
+    xf = sketches.astype(jnp.float32)
+    p = xf.shape[0]
+    m = jnp.ones((p,), jnp.float32) if mask is None else mask.astype(jnp.float32)
+    mu = jnp.sum(xf * m[:, None], axis=0, keepdims=True) / jnp.maximum(jnp.sum(m), 1.0)
+    x = _normalize(xf - mu)  # centering removes the shared descent direction
+
+    if restarts > 1:
+        keys = jax.random.split(key, restarts)
+        cents_all, assign_all = jax.vmap(
+            lambda kk: kmeans_cosine(kk, sketches, k, iters, mask, restarts=1)
+        )(keys)
+        # objective: weighted mean cos to own prototype
+        def score(cents, assign):
+            sims = kops.cosine_similarity(x, cents)
+            picked = jnp.take_along_axis(sims, assign[:, None], axis=1)[:, 0]
+            return jnp.sum(picked * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+        scores = jax.vmap(score)(cents_all, assign_all)
+        best = jnp.argmax(scores)
+        return cents_all[best], assign_all[best]
+
+    # k-means++ style seeding on the sphere
+    def seed_body(carry, i):
+        cents, key = carry
+        sims = kops.cosine_similarity(x, cents)  # (P, K)
+        chosen = jnp.arange(k) < i
+        d2 = (1.0 - jnp.max(jnp.where(chosen[None, :], sims, -1.0), axis=1)) * m
+        key, sub = jax.random.split(key)
+        idx = jax.random.categorical(sub, jnp.log(jnp.maximum(d2, 1e-9)))
+        cents = cents.at[i].set(x[idx])
+        return (cents, key), None
+
+    key, sub = jax.random.split(key)
+    first = x[jnp.argmax(m * jax.random.uniform(sub, (p,)))]
+    cents0 = jnp.zeros((k, x.shape[1]), jnp.float32).at[0].set(first)
+    (cents, _), _ = jax.lax.scan(seed_body, (cents0, key), jnp.arange(1, k))
+
+    def lloyd(cents, _):
+        sims = kops.cosine_similarity(x, cents)
+        assign = jnp.argmax(sims, axis=1)
+        sums = kops.segment_aggregate(x, assign, k, weights=m)  # (K, d)
+        empty = jnp.linalg.norm(sums, axis=1, keepdims=True) < 1e-8
+        cents = jnp.where(empty, cents, _normalize(sums))
+        return cents, None
+
+    cents, _ = jax.lax.scan(lloyd, cents, None, length=iters)
+    sims = kops.cosine_similarity(x, cents)
+    assign = jnp.argmax(sims, axis=1)
+    return cents, assign
+
+
+@jax.jit
+def assign_and_update(
+    state: ClusterState, sketches: jnp.ndarray, mask=None, ema: float = 0.3
+) -> Tuple[ClusterState, jnp.ndarray, jnp.ndarray]:
+    """Alg. 1 lines 17–19: nearest-prototype assignment + EMA refresh.
+
+    mask: optional (P,) validity weights. Returns
+    (new_state, assignments (P,), sims (P,K)).
+    """
+    xf = sketches.astype(jnp.float32)
+    k = state.centroids.shape[0]
+    m = jnp.ones((xf.shape[0],), jnp.float32) if mask is None else mask.astype(jnp.float32)
+    mu = jnp.sum(xf * m[:, None], axis=0, keepdims=True) / jnp.maximum(jnp.sum(m), 1.0)
+    x = _normalize(xf - mu)  # centering removes the shared descent direction
+    sims = kops.cosine_similarity(x, state.centroids)  # (P, K)
+    assign = jnp.argmax(sims, axis=1)
+
+    sums = kops.segment_aggregate(x, assign, k, weights=m)  # (K, d)
+    counts = kops.segment_aggregate(m[:, None], assign, k)[:, 0]
+    batch_cent = jnp.where(
+        counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1.0), state.centroids
+    )
+    new_cents = _normalize((1 - ema) * state.centroids + ema * batch_cent)
+
+    picked = jnp.take_along_axis(sims, assign[:, None], axis=1)[:, 0]
+    disp = 1.0 - jnp.sum(picked * m) / jnp.maximum(jnp.sum(m), 1.0)
+    new_disp = 0.8 * state.dispersion + 0.2 * disp
+
+    # separation margin: own-centroid sim minus best other-centroid sim.
+    # High margin == discernible clusters (Alg. 1 line 20's "once discernible
+    # clusters emerge"). One-cluster states have margin 0 by construction.
+    others = jnp.where(
+        jax.nn.one_hot(assign, k, dtype=bool), -jnp.inf, sims
+    )
+    second = jnp.max(others, axis=1)
+    second = jnp.where(jnp.isfinite(second), second, picked)
+    marg = jnp.sum((picked - second) * m) / jnp.maximum(jnp.sum(m), 1.0)
+    new_margin = 0.8 * state.margin + 0.2 * marg
+
+    per_cl = kops.segment_aggregate(((1.0 - picked) * m)[:, None], assign, k, weights=None)[:, 0]
+    per_cl = jnp.where(counts > 0, per_cl / jnp.maximum(counts, 1.0), state.cluster_dispersion)
+    new_cl_disp = jnp.where(
+        counts > 0, 0.8 * state.cluster_dispersion + 0.2 * per_cl, state.cluster_dispersion
+    )
+
+    return (
+        dataclasses.replace(
+            state,
+            centroids=new_cents,
+            counts=state.counts + counts,
+            round_counts=0.7 * state.round_counts + 0.3 * counts,
+            dispersion=new_disp,
+            margin=new_margin,
+            cluster_dispersion=new_cl_disp,
+            round=state.round + 1,
+        ),
+        assign,
+        sims,
+    )
+
+
+@jax.jit
+def population_heterogeneity(sketches: jnp.ndarray, mask=None) -> jnp.ndarray:
+    """Eq. (1) single-cohort intra-heterogeneity J on a participant batch:
+    mean pairwise squared distance / 2 == variance around the (masked) mean."""
+    x = sketches.astype(jnp.float32)
+    m = jnp.ones((x.shape[0],), jnp.float32) if mask is None else mask.astype(jnp.float32)
+    tot = jnp.maximum(jnp.sum(m), 1.0)
+    mu = jnp.sum(x * m[:, None], axis=0, keepdims=True) / tot
+    return jnp.sum(m * jnp.sum((x - mu) ** 2, axis=-1)) / tot
+
+
+class OnlineClustering:
+    """Host-side wrapper implementing Algorithm 1's ClientClustering()."""
+
+    def __init__(self, k: int, d_sketch: int, ema: float = 0.3, seed: int = 0):
+        self.k = k
+        self.d_sketch = d_sketch
+        self.state = ClusterState.create(k, d_sketch)
+        self.ema = ema
+        self._key = jax.random.key(seed)
+
+    def step(self, sketches: jnp.ndarray, mask=None) -> Tuple[np.ndarray, np.ndarray]:
+        """One clustering round. sketches: (P, d), mask: optional (P,).
+
+        Returns (assign, sims) over all P rows (padded rows included; the
+        caller filters by its own mask).
+        """
+        if sketches.shape[0] == 0:
+            return np.zeros((0,), np.int32), np.zeros((0, self.k), np.float32)
+        if not bool(self.state.initialized):
+            self._key, sub = jax.random.split(self._key)
+            cents, assign = kmeans_cosine(sub, sketches, self.k, mask=mask)
+            self.state = dataclasses.replace(
+                self.state,
+                centroids=cents,
+                initialized=jnp.ones((), bool),
+                round=self.state.round + 1,
+            )
+            xf = jnp.asarray(sketches, jnp.float32)
+            mm = jnp.ones((xf.shape[0],)) if mask is None else jnp.asarray(mask, jnp.float32)
+            mu = jnp.sum(xf * mm[:, None], axis=0, keepdims=True) / jnp.maximum(jnp.sum(mm), 1.0)
+            sims = kops.cosine_similarity(_normalize(xf - mu), cents)
+            return np.asarray(assign), np.asarray(sims)
+        self.state, assign, sims = assign_and_update(self.state, sketches, mask, self.ema)
+        return np.asarray(assign), np.asarray(sims)
+
+    @property
+    def dispersion(self) -> float:
+        return float(self.state.dispersion)
+
+    @property
+    def rounds(self) -> int:
+        return int(self.state.round)
+
+    def cluster_sizes(self) -> np.ndarray:
+        return np.asarray(self.state.round_counts)
+
+    def cluster_dispersions(self) -> np.ndarray:
+        return np.asarray(self.state.cluster_dispersion)
+
+    @property
+    def margin(self) -> float:
+        return float(self.state.margin)

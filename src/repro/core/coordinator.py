@@ -1,0 +1,310 @@
+"""Cohort coordinator (paper §3.2, §5): matching, partition, resilience.
+
+Host-side control plane. Per round it (a) matches client affinity requests
+to leaf cohorts, (b) runs the clustering feedback for each cohort on the
+round's gradient sketches, (c) evaluates the Lemma-4.1 partition criteria
+and spawns child cohorts, (d) detects affinity-claim anomalies and
+blacklists repeat offenders, and (e) checkpoints its soft state (which can
+also be rebuilt from client-held affinity records — §5.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import pickle
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.clustering import OnlineClustering, population_heterogeneity
+from repro.core.cohort import AffinityMessage, CohortTree
+from repro.core.criteria import PartitionCriteria
+from repro.core.selection import instant_reward
+
+
+@dataclasses.dataclass
+class PartitionEvent:
+    parent: str
+    children: List[str]
+    round_idx: int
+    # cluster index -> child id (clients map their L to the new cohort)
+    cluster_to_child: Dict[int, str]
+
+
+@dataclasses.dataclass
+class CohortStats:
+    initial_participants: float = 0.0
+    initial_heterogeneity: float = 1.0
+    rounds_trained: int = 0
+
+
+class CohortCoordinator:
+    """Logically-centralized coordinator over the cohort tree."""
+
+    def __init__(
+        self,
+        d_sketch: int,
+        criteria: Optional[PartitionCriteria] = None,
+        cluster_k: int = 2,
+        clustering_start_frac: float = 0.05,
+        anomaly_threshold: float = -0.5,
+        anomaly_strikes: int = 3,
+        max_cohorts: int = 8,
+        seed: int = 0,
+    ):
+        self.d_sketch = d_sketch
+        self.criteria = criteria or PartitionCriteria(k=cluster_k)
+        self.cluster_k = cluster_k
+        self.clustering_start_frac = clustering_start_frac
+        self.anomaly_threshold = anomaly_threshold
+        self.anomaly_strikes = anomaly_strikes
+        self.max_cohorts = max_cohorts
+        self.seed = seed
+
+        self.tree = CohortTree()
+        self.clusterers: Dict[str, OnlineClustering] = {
+            "0": OnlineClustering(cluster_k, d_sketch, seed=seed)
+        }
+        # per-leaf identity vector: EMA of the member fingerprint mean. Used
+        # for flat nearest-identity matching, which stays fresh after
+        # partitions (internal-node prototypes go stale as cohorts drift).
+        self.identity: Dict[str, np.ndarray] = {}
+        self.stats: Dict[str, CohortStats] = {"0": CohortStats()}
+        self.strikes: Dict[int, int] = {}
+        self.blacklist: set = set()
+        self.partitions: List[PartitionEvent] = []
+
+    # ---------------------------------------------------------------- match
+    def match_request(
+        self,
+        client_id: int,
+        requested: Optional[str],
+        cluster_index: int = -1,
+        fingerprint=None,
+    ) -> Optional[str]:
+        """§5.1 Request Match: resolve a client's affinity request to a leaf.
+
+        Descends the cohort tree from the requested node. At each partitioned
+        node the child is picked by (in order of preference): the client's own
+        cluster index L (only valid at the requested node itself), the cosine
+        similarity of the client's gradient fingerprint to the node's retained
+        cluster prototypes ("the cohort coordinator should assist clients to
+        select their best-fit cohort"), or a deterministic spread.
+        """
+        if client_id in self.blacklist:
+            return None
+        if requested is None or requested not in self.tree.nodes:
+            requested = self.tree.root
+        # flat nearest-identity matching (fresh signal) when possible
+        if fingerprint is not None and requested == self.tree.root:
+            leaf, _conf = self.match_with_confidence(fingerprint)
+            if leaf is not None:
+                return leaf
+        node = self.tree.nodes[requested]
+        first = True
+        while not node.is_leaf:
+            idx = None
+            if first and 0 <= cluster_index < len(node.children):
+                idx = cluster_index
+            elif fingerprint is not None:
+                cl = self.clusterers.get(node.cohort_id)
+                if cl is not None and bool(cl.state.initialized):
+                    cents = np.asarray(cl.state.centroids)
+                    sims = cents @ np.asarray(fingerprint, np.float32)
+                    idx = int(np.argmax(sims[: len(node.children)]))
+            if idx is None:
+                idx = client_id % len(node.children)
+            node = self.tree.nodes[node.children[idx]]
+            first = False
+        return node.cohort_id
+
+    def match_with_confidence(self, fingerprint):
+        """Flat nearest-identity match -> (leaf, margin). margin = cosine gap
+        between the best and second-best leaf identity; low margin means the
+        fingerprint does not clearly belong anywhere (serve an ancestor)."""
+        leaves = [l for l in self.tree.leaves() if l in self.identity]
+        if len(leaves) < 2:
+            return None, 0.0
+        fp = np.asarray(fingerprint, np.float32)
+        nf = np.linalg.norm(fp) + 1e-9
+        sims = []
+        for l in leaves:
+            ident = self.identity[l]
+            ni = np.linalg.norm(ident) + 1e-9
+            sims.append((float(ident @ fp) / (ni * nf), l))
+        sims.sort(reverse=True)
+        margin = sims[0][0] - sims[1][0]
+        return sims[0][1], margin
+
+    # ------------------------------------------------------------- feedback
+    def feedback(
+        self,
+        cohort_id: str,
+        client_ids: Sequence[int],
+        sketches: jnp.ndarray,
+        round_idx: int,
+        total_rounds: int,
+        claimed_preferred: Optional[Sequence[bool]] = None,
+        mask=None,
+    ) -> Tuple[Dict[int, AffinityMessage], Optional[PartitionEvent]]:
+        """One cohort's post-round clustering + reward feedback (§3.2 stage 4).
+
+        sketches may be padded to a fixed batch size (compile-once shapes);
+        the first len(client_ids) rows must be the valid participants and
+        `mask` their validity weights. claimed_preferred[i]: client i
+        requested this cohort as its best-fit (used for the fake-affinity
+        anomaly detection of §5.2).
+        """
+        n = len(client_ids)
+        if n == 0:
+            return {}, None
+        clusterer = self.clusterers[cohort_id]
+        st = self.stats[cohort_id]
+        st.rounds_trained += 1
+        st.initial_participants = max(st.initial_participants, float(n))
+
+        # clustering only once gradients are informative (§4.4 cluster start)
+        frac = round_idx / max(total_rounds, 1)
+        messages: Dict[int, AffinityMessage] = {}
+        assign = np.full((max(n, sketches.shape[0]),), -1, np.int32)
+        if frac >= self.clustering_start_frac:
+            assign, _sims = clusterer.step(sketches, mask)
+            if st.rounds_trained <= 3:
+                st.initial_heterogeneity = float(population_heterogeneity(sketches, mask))
+
+        delta, _dist = instant_reward(sketches, mask)
+        delta = np.asarray(delta)
+
+        # refresh this leaf's identity vector from its members' fingerprints
+        sk_np = np.asarray(sketches[:n], np.float32)
+        ident = sk_np.mean(0)
+        if cohort_id in self.identity:
+            self.identity[cohort_id] = 0.8 * self.identity[cohort_id] + 0.2 * ident
+        else:
+            self.identity[cohort_id] = ident
+
+        for i, cid in enumerate(client_ids):
+            messages[cid] = AffinityMessage(
+                cohort_id=cohort_id, reward=float(delta[i]), cluster_index=int(assign[i])
+            )
+            # §5.2 fake-affinity anomaly: claimed best-fit but strong outlier.
+            if claimed_preferred is not None and claimed_preferred[i]:
+                if delta[i] < self.anomaly_threshold:
+                    self.strikes[cid] = self.strikes.get(cid, 0) + 1
+                    if self.strikes[cid] >= self.anomaly_strikes:
+                        self.blacklist.add(cid)
+                else:
+                    self.strikes[cid] = max(0, self.strikes.get(cid, 0) - 1)
+
+        event = self._maybe_partition(cohort_id, round_idx, total_rounds, n)
+        return messages, event
+
+    # ------------------------------------------------------------ partition
+    def _maybe_partition(
+        self, cohort_id: str, round_idx: int, total_rounds: int, participants: int
+    ) -> Optional[PartitionEvent]:
+        if len(self.tree.leaves()) >= self.max_cohorts:
+            return None
+        clusterer = self.clusterers[cohort_id]
+        st = self.stats[cohort_id]
+        sizes = clusterer.cluster_sizes()
+        ok = self.criteria.should_partition(
+            round_idx=round_idx,
+            total_rounds=total_rounds,
+            parent_dispersion=clusterer.dispersion,
+            child_dispersions=list(clusterer.cluster_dispersions()),
+            child_sizes=list(sizes),
+            participants_per_round=float(participants),
+            initial_participants=st.initial_participants,
+            initial_heterogeneity=st.initial_heterogeneity,
+            clustering_rounds=clusterer.rounds,
+            margin=clusterer.margin,
+        )
+        if not ok:
+            return None
+        children = self.tree.partition(cohort_id, self.cluster_k)
+        parent_cents = np.asarray(clusterer.state.centroids)
+        for i, ch in enumerate(children):
+            self.clusterers[ch] = OnlineClustering(
+                self.cluster_k, self.d_sketch, seed=self.seed + hash(ch) % 10_000
+            )
+            # child identity starts as the parent's cluster prototype
+            self.identity[ch] = parent_cents[i].copy()
+            self.stats[ch] = CohortStats(
+                initial_participants=st.initial_participants / self.cluster_k,
+                initial_heterogeneity=float(clusterer.cluster_dispersions()[i]),
+            )
+        event = PartitionEvent(
+            parent=cohort_id,
+            children=children,
+            round_idx=round_idx,
+            cluster_to_child={i: ch for i, ch in enumerate(children)},
+        )
+        self.partitions.append(event)
+        return event
+
+    # ------------------------------------------------------------ tolerance
+    def checkpoint(self, path: str | Path):
+        state = {
+            "tree_nodes": {
+                cid: (n.parent, list(n.children)) for cid, n in self.tree.nodes.items()
+            },
+            "clusterer_states": {
+                cid: np.asarray(
+                    np.concatenate(
+                        [np.ravel(np.asarray(getattr(c.state, f.name)))
+                         for f in dataclasses.fields(c.state)]
+                    )
+                )
+                for cid, c in self.clusterers.items()
+            },
+            "cluster_k": self.cluster_k,
+            "d_sketch": self.d_sketch,
+            "blacklist": sorted(self.blacklist),
+            "partitions": [dataclasses.asdict(p) for p in self.partitions],
+        }
+        with open(path, "wb") as f:
+            pickle.dump(state, f)
+
+    @staticmethod
+    def recover(path: str | Path, **kwargs) -> "CohortCoordinator":
+        """Cohort-coordinator failover (§5.2): rebuild from checkpoint.
+
+        Clusterer EMA states restart fresh (they re-anchor within a few
+        rounds); the tree, blacklist, and partition history are restored —
+        the information clients cannot replay.
+        """
+        with open(path, "rb") as f:
+            state = pickle.load(f)
+        co = CohortCoordinator(state["d_sketch"], cluster_k=state["cluster_k"], **kwargs)
+        for cid, (parent, children) in sorted(state["tree_nodes"].items(), key=lambda kv: len(kv[0])):
+            if cid == "0":
+                continue
+            if cid not in co.tree.nodes:
+                from repro.core.cohort import CohortNode
+
+                co.tree.nodes[cid] = CohortNode(cid, parent)
+                co.clusterers[cid] = OnlineClustering(co.cluster_k, co.d_sketch)
+                co.stats[cid] = CohortStats()
+        for cid, (parent, children) in state["tree_nodes"].items():
+            co.tree.nodes[cid].children = list(children)
+        co.blacklist = set(state["blacklist"])
+        return co
+
+    def rebuild_from_requests(self, requests: Sequence[Tuple[int, str, int]]):
+        """§5.1 soft-state recovery: reconstruct leaf set from the affinity
+        requests clients submit (client_id, cohort_id, cluster_index)."""
+        from repro.core.cohort import CohortNode
+
+        for _cid, cohort_id, _L in requests:
+            parts = cohort_id.split(".")
+            for depth in range(1, len(parts) + 1):
+                node_id = ".".join(parts[:depth])
+                if node_id not in self.tree.nodes:
+                    parent = ".".join(parts[: depth - 1]) or None
+                    self.tree.nodes[node_id] = CohortNode(node_id, parent)
+                    if parent and node_id not in self.tree.nodes[parent].children:
+                        self.tree.nodes[parent].children.append(node_id)
+                    self.clusterers[node_id] = OnlineClustering(self.cluster_k, self.d_sketch)
+                    self.stats[node_id] = CohortStats()

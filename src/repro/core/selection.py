@@ -1,0 +1,81 @@
+"""Reward computation and ε-greedy cohort selection (paper §4.3).
+
+Instant reward for participant i in cohort m:
+    D_i = ||g_i − ḡ_m||₂              (distance to estimated cohort center)
+    thr = avg(D) + std(D)             (z-score outlier threshold [4])
+    ΔR_i = 1 − D_i / thr              (negative ⇒ outlier of this cohort)
+
+Reward record update (EMA, γ = 0.2):  R ← γ·ΔR + (1−γ)·R
+
+Selection: with probability ε_r (decaying over rounds) explore a random
+cohort, otherwise exploit argmax reward. (Algorithm 1's pseudocode flips the
+inequality relative to the §4.3 prose — "1−ε probability of selecting a
+cohort with maximum reward"; we follow the prose.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def instant_reward(sketches: jnp.ndarray, mask=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """ΔR for every participant of one cohort round.
+
+    sketches: (P, d) client gradient sketches (this cohort's participants);
+    mask: optional (P,) validity weights (padded rows get weight 0 in the
+    center/threshold statistics but still receive a ΔR).
+    Returns (delta_r (P,), distances (P,)).
+    """
+    x = sketches.astype(jnp.float32)
+    m = jnp.ones((x.shape[0],), jnp.float32) if mask is None else mask.astype(jnp.float32)
+    tot = jnp.maximum(jnp.sum(m), 1.0)
+    center = jnp.sum(x * m[:, None], axis=0, keepdims=True) / tot
+    d = jnp.linalg.norm(x - center, axis=1)
+    mean_d = jnp.sum(d * m) / tot
+    var_d = jnp.sum(m * (d - mean_d) ** 2) / tot
+    thr = mean_d + jnp.sqrt(jnp.maximum(var_d, 0.0))
+    delta = 1.0 - d / jnp.maximum(thr, 1e-9)
+    return delta, d
+
+
+def update_rewards(prev: float, delta: float, gamma: float = 0.2) -> float:
+    return gamma * delta + (1.0 - gamma) * prev
+
+
+@dataclasses.dataclass
+class CohortSelector:
+    """Decaying ε-greedy over the client's affinity records."""
+
+    epsilon0: float = 0.8
+    decay: float = 0.98
+    min_epsilon: float = 0.05
+
+    def epsilon(self, round_idx: int) -> float:
+        return max(self.min_epsilon, self.epsilon0 * (self.decay**round_idx))
+
+    def select(
+        self,
+        rng: np.random.Generator,
+        rewards: Dict[str, float],
+        leaves: List[str],
+        round_idx: int,
+    ) -> str:
+        """Pick a cohort *request* for one client.
+
+        The request may name a stale (non-leaf) cohort — e.g. the parent a
+        client trained with before a partition it hasn't heard about. The
+        coordinator resolves such requests to a leaf using the client's
+        cluster index (§5.1 Request Match); resolution is NOT the client's
+        job, so exploitation runs over everything the client knows.
+        """
+        if not leaves:
+            raise ValueError("no leaf cohorts")
+        eps = self.epsilon(round_idx)
+        if not rewards or rng.random() < eps:
+            return leaves[rng.integers(len(leaves))]
+        return max(rewards.items(), key=lambda kv: kv[1])[0]

@@ -1,0 +1,96 @@
+"""Gradient sketches: fixed-dimension client-update fingerprints.
+
+The paper clusters clients on raw model gradients (models are <=10M params).
+For the assigned 1B-400B architectures raw gradients are infeasible to
+collect per participant, so Auxo-on-TPU clusters on *sketches* — seeded
+Johnson-Lindenstrauss random projections, which preserve cosine similarity
+in expectation. Three strategies (DESIGN.md §3):
+
+- ``full_proj``      project every leaf (paper-faithful; small models)
+- ``last_block_proj`` project only leaves matching a path filter (default:
+                      the last transformer block + final norm)
+- ``tensor_norms``   vector of per-leaf L2 norms (cheapest, least faithful)
+
+All strategies are jit-friendly pure functions of the update pytree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _leaf_projection(leaf: jnp.ndarray, d_sketch: int, seed: int) -> jnp.ndarray:
+    """Project a flat leaf to d_sketch dims with a seeded Rademacher matrix.
+
+    Rademacher (+-1) entries via bit-twiddled counter PRNG keeps generation
+    cheap relative to a normal sample while preserving JL guarantees.
+    """
+    flat = leaf.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    key = jax.random.key(seed)
+    # blocked projection: avoid materializing (n, d_sketch) for huge leaves,
+    # but don't over-pad tiny leaves either.
+    block = 1 << 16
+    while block > 128 and block // 2 >= n:
+        block //= 2
+    pad = (-n) % block
+    flat = jnp.pad(flat, (0, pad))
+    nb = flat.shape[0] // block
+    fb = flat.reshape(nb, block)
+
+    def body(carry, ib):
+        i, b = ib
+        r = jax.random.rademacher(jax.random.fold_in(key, i), (block, d_sketch), jnp.float32)
+        return carry + b @ r, None
+
+    out, _ = jax.lax.scan(body, jnp.zeros((d_sketch,), jnp.float32), (jnp.arange(nb), fb))
+    return out / np.sqrt(max(n, 1))
+
+
+@dataclasses.dataclass(frozen=True)
+class GradientSketcher:
+    d_sketch: int = 256
+    strategy: str = "full_proj"  # full_proj | last_block_proj | tensor_norms
+    path_filter: Sequence[str] = ("final_norm", "head")
+    last_block_index: int = -1
+    seed: int = 1234
+
+    def _selected(self, update) -> list:
+        flat = jax.tree_util.tree_leaves_with_path(update)
+        if self.strategy == "full_proj":
+            return [(jax.tree_util.keystr(p), l) for p, l in flat]
+        if self.strategy == "last_block_proj":
+            picked = []
+            for p, l in flat:
+                ks = jax.tree_util.keystr(p)
+                if any(f in ks for f in self.path_filter):
+                    picked.append((ks, l))
+                elif "backbone" in ks and l.ndim >= 2:
+                    # stacked layers: take the last block's slice
+                    picked.append((ks, l[self.last_block_index]))
+            return picked
+        if self.strategy == "tensor_norms":
+            return [(jax.tree_util.keystr(p), l) for p, l in flat]
+        raise ValueError(self.strategy)
+
+    def __call__(self, update) -> jnp.ndarray:
+        """update: pytree of client model delta -> (d_sketch,) float32."""
+        picked = self._selected(update)
+        if self.strategy == "tensor_norms":
+            norms = jnp.stack([jnp.linalg.norm(l.astype(jnp.float32)) for _, l in picked])
+            out = jnp.zeros((self.d_sketch,), jnp.float32)
+            return out.at[: norms.shape[0] % self.d_sketch or self.d_sketch].set(
+                norms[: self.d_sketch]
+            )
+        acc = jnp.zeros((self.d_sketch,), jnp.float32)
+        for i, (ks, leaf) in enumerate(picked):
+            acc = acc + _leaf_projection(leaf, self.d_sketch, self.seed * 7919 + i)
+        return acc
+
+    def batch(self, updates) -> jnp.ndarray:
+        """updates: pytree with leading client axis -> (P, d_sketch)."""
+        return jax.vmap(self.__call__)(updates)

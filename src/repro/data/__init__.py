@@ -1,0 +1,10 @@
+"""Federated data pipeline: non-IID partitions, availability, device traces."""
+from repro.data.availability import AvailabilityTrace, DeviceSpeeds
+from repro.data.datasets import FederatedClassification, make_population
+
+__all__ = [
+    "AvailabilityTrace",
+    "DeviceSpeeds",
+    "FederatedClassification",
+    "make_population",
+]

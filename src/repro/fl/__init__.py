@@ -1,0 +1,18 @@
+"""FL substrate: server algorithms, client execution, round engine, baselines."""
+from repro.fl.algorithms import SERVER_OPTS, ServerOpt, make_server_opt
+from repro.fl.client import local_train
+from repro.fl.engine import AuxoConfig, AuxoEngine, FLConfig, run_auxo, run_fl
+from repro.fl.task import MLPTask
+
+__all__ = [
+    "SERVER_OPTS",
+    "ServerOpt",
+    "make_server_opt",
+    "local_train",
+    "AuxoConfig",
+    "AuxoEngine",
+    "FLConfig",
+    "run_auxo",
+    "run_fl",
+    "MLPTask",
+]

@@ -1,0 +1,95 @@
+"""Server-side FL optimizers and client-objective variants.
+
+Server optimizers follow Reddi et al., *Adaptive Federated Optimization*
+(ICLR '21): the aggregated client delta is treated as a pseudo-gradient.
+FedYoGi is the paper's default baseline/substrate algorithm.
+
+Client-side variants (FedProx proximal term, q-FedAvg loss-weighted
+aggregation, FTFA fine-tuning) live in client.py / engine.py hooks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import tree_add, tree_scale, tree_zeros_like
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerOpt:
+    name: str
+    init: Callable[[Any], Any]
+    apply: Callable[[Any, Any, Any], Tuple[Any, Any]]  # (params, state, delta)
+
+
+def _fedavg(lr: float = 1.0) -> ServerOpt:
+    def init(params):
+        return ()
+
+    def apply(params, state, delta):
+        return tree_add(params, tree_scale(delta, lr)), state
+
+    return ServerOpt("fedavg", init, apply)
+
+
+def _adaptive(kind: str, lr: float = 1e-2, beta1=0.9, beta2=0.99, tau=1e-3) -> ServerOpt:
+    def init(params):
+        return {
+            "m": tree_zeros_like(params),
+            "v": jax.tree.map(lambda x: jnp.full_like(x, tau * tau), params),
+        }
+
+    def apply(params, state, delta):
+        m = jax.tree.map(lambda m, d: beta1 * m + (1 - beta1) * d, state["m"], delta)
+        if kind == "yogi":
+            v = jax.tree.map(
+                lambda v, d: v - (1 - beta2) * (d * d) * jnp.sign(v - d * d),
+                state["v"],
+                delta,
+            )
+        elif kind == "adam":
+            v = jax.tree.map(lambda v, d: beta2 * v + (1 - beta2) * d * d, state["v"], delta)
+        elif kind == "adagrad":
+            v = jax.tree.map(lambda v, d: v + d * d, state["v"], delta)
+        else:
+            raise ValueError(kind)
+        new = jax.tree.map(
+            lambda p, m, v: p + lr * m / (jnp.sqrt(v) + tau), params, m, v
+        )
+        return new, {"m": m, "v": v}
+
+    return ServerOpt(f"fed{kind}", init, apply)
+
+
+SERVER_OPTS: Dict[str, Callable[..., ServerOpt]] = {
+    "fedavg": _fedavg,
+    "fedyogi": lambda **kw: _adaptive("yogi", **kw),
+    "fedadam": lambda **kw: _adaptive("adam", **kw),
+    "fedadagrad": lambda **kw: _adaptive("adagrad", **kw),
+}
+
+
+def make_server_opt(name: str, **kw) -> ServerOpt:
+    key = name.lower().replace("-", "").replace("_", "")
+    if key in ("yogi", "fedyogi"):
+        return SERVER_OPTS["fedyogi"](**kw)
+    if key in ("adam", "fedadam"):
+        return SERVER_OPTS["fedadam"](**kw)
+    if key in ("adagrad", "fedadagrad"):
+        return SERVER_OPTS["fedadagrad"](**kw)
+    if key in ("avg", "fedavg", "qfedavg", "fedprox"):
+        # fedprox/q-fedavg modify the client side; server update is FedAvg.
+        return SERVER_OPTS["fedavg"](**kw)
+    raise ValueError(f"unknown FL algorithm {name}")
+
+
+# ---------------------------------------------------------------------------
+# q-FedAvg aggregation weights (Li et al., Fair Resource Allocation, ICLR'20)
+# ---------------------------------------------------------------------------
+def qfedavg_weights(losses: jnp.ndarray, q: float = 1.0) -> jnp.ndarray:
+    """Aggregation weights ∝ loss^q — upweights poorly-served clients."""
+    w = jnp.power(jnp.maximum(losses, 1e-6), q)
+    return w / jnp.maximum(jnp.sum(w), 1e-9)

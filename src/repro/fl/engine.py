@@ -1,0 +1,474 @@
+"""Multi-cohort FL engine: the full Auxo lifecycle (paper Fig. 6).
+
+Per global round:
+  ① matching   — available clients submit affinity requests (decaying
+                 ε-greedy over their client-held reward records) and the
+                 coordinator matches them to leaf cohorts;
+  ②③ FL round  — each leaf cohort independently selects participants
+                 (equal share of the round's resource budget, with
+                 over-commitment straggler drop), runs vmapped local
+                 training, aggregates (FedAvg/YoGi/…; q-FedAvg weights),
+                 and applies its server optimizer;
+  ④ feedback   — each cohort clusters the round's gradient sketches
+                 (Algorithm 1), sends affinity messages back, and the
+                 coordinator evaluates the partition criteria; on partition
+                 the children warm-start from the parent model (§4.2) and
+                 clients inherit child rewards R + 0.1·1(L == k)
+                 (Algorithm 1 line 22).
+
+Wall-clock is simulated from device-speed traces; cohorts advance their own
+clocks in parallel (they are independent FL jobs). Resource = client·steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cohort import ClientAffinity
+from repro.core.coordinator import CohortCoordinator, PartitionEvent
+from repro.core.criteria import PartitionCriteria
+from repro.core.selection import CohortSelector
+from repro.core.sketch import GradientSketcher
+from repro.data.availability import AvailabilityTrace, DeviceSpeeds
+from repro.data.datasets import FederatedClassification
+from repro.fl.algorithms import make_server_opt, qfedavg_weights
+from repro.fl.client import local_train
+from repro.utils import tree_scale
+
+
+@dataclasses.dataclass
+class FLConfig:
+    rounds: int = 150
+    participants_per_round: int = 100
+    local_steps: int = 5
+    batch_size: int = 32
+    lr: float = 0.05
+    algorithm: str = "fedyogi"
+    server_lr: float = 0.05
+    prox_mu: float = 0.0
+    qfed_q: float = 0.0
+    overcommit: float = 1.25
+    use_availability: bool = True
+    speed_sigma: float = 0.6
+    eval_every: int = 5
+    seed: int = 0
+    # resilience knobs (§7.5)
+    corrupt_frac: float = 0.0
+    dp_clip: float = 0.0
+    dp_sigma: float = 0.0
+    affinity_loss_rate: float = 0.0
+
+
+@dataclasses.dataclass
+class AuxoConfig:
+    enabled: bool = True
+    d_sketch: int = 64
+    cluster_k: int = 2
+    max_cohorts: int = 8
+    gamma: float = 0.2
+    epsilon0: float = 0.8
+    epsilon_decay: float = 0.93
+    clustering_start_frac: float = 0.05
+    partition_start_frac: float = 0.15
+    partition_end_frac: float = 0.85
+    sketch_strategy: str = "auto"  # auto -> task.head_paths if defined
+    # Beyond-paper: always resolve check-ins by prototype descent from the
+    # root over the client's EMA fingerprint (the paper's ε-greedy remains
+    # the exploration path). The paper cannot do this — its per-round
+    # gradients are not comparable across rounds; our client-held EMA
+    # fingerprints are. Ablated in benchmarks/table5_clustered_fl.py.
+    assisted_matching: bool = True
+    # reward level at which a client stops re-descending and exploits its
+    # known cohort. ΔR is *relative to the round's participants*, so mixed
+    # cohorts hand out positive rewards too — keep this above 1 (never
+    # stick) unless ablating; stuck clients are instead rescued by the
+    # negative-streak forced exploration below.
+    reward_stick: float = 1.1
+    neg_streak_explore: int = 2  # rounds of negative reward before forced explore
+    fp_decay_on_streak: float = 1.0  # 1.0 = no decay (multi-seed A/B: decay hurts)
+    # eval-time routing: serve the ROOT (ancestor) model for clients whose
+    # fingerprint match is unconfident and who hold no positive leaf reward
+    # — a confidently-wrong specialist is worse than the generalist.
+    serve_confidence: float = 0.05
+    min_members: int = 15
+    margin_threshold: float = 0.4
+    het_reduction_slack: float = 2.0
+    alpha: float = 1.0
+
+
+@dataclasses.dataclass
+class CohortModel:
+    params: Any
+    opt_state: Any
+    clock: float = 0.0
+    rounds: int = 0
+
+
+class AuxoEngine:
+    def __init__(
+        self,
+        task,
+        population: FederatedClassification,
+        fl: FLConfig,
+        auxo: Optional[AuxoConfig] = None,
+    ):
+        self.task = task
+        self.pop = population
+        self.fl = fl
+        self.auxo = auxo or AuxoConfig(enabled=False)
+        self.rng = np.random.default_rng(fl.seed)
+        key = jax.random.key(fl.seed)
+
+        params = task.init(key)
+        self.server_opt = make_server_opt(fl.algorithm, lr=fl.server_lr)
+        self.cohorts: Dict[str, CohortModel] = {
+            "0": CohortModel(params=params, opt_state=self.server_opt.init(params))
+        }
+        self.coordinator = CohortCoordinator(
+            d_sketch=self.auxo.d_sketch,
+            cluster_k=self.auxo.cluster_k,
+            criteria=PartitionCriteria(
+                k=self.auxo.cluster_k,
+                alpha=self.auxo.alpha,
+                min_members=self.auxo.min_members,
+                start_frac=self.auxo.partition_start_frac,
+                end_frac=self.auxo.partition_end_frac,
+                margin_threshold=self.auxo.margin_threshold,
+                het_reduction_slack=self.auxo.het_reduction_slack,
+            ),
+            clustering_start_frac=self.auxo.clustering_start_frac,
+            max_cohorts=self.auxo.max_cohorts,
+            seed=fl.seed,
+        )
+        self.selector = CohortSelector(
+            epsilon0=self.auxo.epsilon0, decay=self.auxo.epsilon_decay
+        )
+        head_paths = getattr(task, "head_paths", None)
+        if self.auxo.sketch_strategy == "auto" and head_paths:
+            # cluster on the classifier-head gradients: the label-skew
+            # fingerprint (scale-adapted analog of the paper's full-gradient
+            # clustering; see DESIGN.md §3)
+            self.sketcher = GradientSketcher(
+                d_sketch=self.auxo.d_sketch,
+                strategy="last_block_proj",
+                path_filter=tuple(head_paths),
+            )
+        else:
+            strat = "full_proj" if self.auxo.sketch_strategy == "auto" else self.auxo.sketch_strategy
+            self.sketcher = GradientSketcher(d_sketch=self.auxo.d_sketch, strategy=strat)
+        self.affinity = [ClientAffinity() for _ in range(population.n_clients)]
+        self.trace = AvailabilityTrace(population.n_clients, seed=fl.seed)
+        self.speeds = DeviceSpeeds(population.n_clients, sigma=fl.speed_sigma, seed=fl.seed)
+        n_corrupt = int(fl.corrupt_frac * population.n_clients)
+        self.corrupted = set(self.rng.choice(population.n_clients, n_corrupt, replace=False).tolist()) if n_corrupt else set()
+        self.history: List[Dict[str, Any]] = []
+        self.resource_used = 0.0  # client local steps × batch (sample count)
+        # client-held gradient fingerprints: EMA of centered+normalized
+        # per-round sketches. Lives with the client (soft state, §5.1);
+        # denoises single-round sketches so clustering/affinity work on a
+        # stable signal. fp_beta is the EMA weight of the new round.
+        self.fingerprint = np.zeros((population.n_clients, self.auxo.d_sketch), np.float32)
+        self.fp_seen = np.zeros(population.n_clients, bool)
+        self.fp_beta = 0.4
+        self.neg_streak = np.zeros(population.n_clients, np.int32)
+        # cross-cohort sketch mean EMA: fingerprints are centered against a
+        # GLOBAL reference (not the training cohort's mean) so they remain
+        # comparable to the root prototypes after cohorts specialize.
+        self.global_mu = np.zeros(self.auxo.d_sketch, np.float32)
+        self.global_mu_seen = False
+
+        self._quota = max(2, int(fl.participants_per_round * fl.overcommit))
+        self._vmapped_sketch = jax.jit(jax.vmap(self.sketcher))
+        self._vmapped_train = jax.vmap(
+            lambda p, xs, ys, k: local_train(
+                self.task.loss,
+                p,
+                xs,
+                ys,
+                k,
+                lr=fl.lr,
+                prox_mu=fl.prox_mu,
+                dp_clip=fl.dp_clip,
+                dp_sigma=fl.dp_sigma,
+            ),
+            in_axes=(None, 0, 0, 0),
+        )
+
+    # ------------------------------------------------------------------ API
+    def run(self) -> List[Dict[str, Any]]:
+        for r in range(self.fl.rounds):
+            self.step(r)
+            if r % self.fl.eval_every == 0 or r == self.fl.rounds - 1:
+                self.history.append(self.evaluate(r))
+        return self.history
+
+    # ------------------------------------------------------------ one round
+    def step(self, r: int):
+        fl = self.fl
+        if fl.use_availability:
+            available = self.trace.available(r, self.rng)
+        else:
+            available = np.arange(self.pop.n_clients)
+        available = [c for c in available if c not in self.coordinator.blacklist]
+        if len(available) == 0:
+            return
+
+        # ① matching stage: clients submit affinity requests
+        leaves = self.coordinator.tree.leaves()
+        requests: Dict[str, List[int]] = {l: [] for l in leaves}
+        claimed: Dict[str, List[bool]] = {l: [] for l in leaves}
+        for c in available:
+            if self.auxo.enabled and len(leaves) > 1:
+                want = self.selector.select(self.rng, self.affinity[c].rewards, leaves, r)
+                # a client whose best affinity is non-positive is an outlier
+                # everywhere it has trained — request the root instead and
+                # let the coordinator's prototype descent place it (§5.1).
+                # With assisted_matching every fingerprinted client resolves
+                # by prototype descent unless it is exploring.
+                exploring = want not in self.affinity[c].rewards
+                if self.neg_streak[c] >= self.auxo.neg_streak_explore:
+                    # persistently an outlier where the system puts it:
+                    # decay the (possibly stale) fingerprint so fresh rounds
+                    # dominate its EMA, and explore a random leaf. (ΔR is
+                    # relative, so outright wiping punishes unlucky correct
+                    # clients — measured worse.)
+                    if self.auxo.fp_decay_on_streak < 1.0:
+                        self.fingerprint[c] *= self.auxo.fp_decay_on_streak
+                    self.neg_streak[c] = 0
+                    want = leaves[self.rng.integers(len(leaves))]
+                    exploring = True
+                best_r = self.affinity[c].rewards.get(want, 0.0)
+                thresh = self.auxo.reward_stick if self.auxo.assisted_matching else 0.0
+                if self.fp_seen[c] and not exploring and best_r <= thresh:
+                    want = "0"
+            else:
+                want = leaves[0]
+            L = self.affinity[c].cluster_index.get(want, -1)
+            fp = self.fingerprint[c] if self.fp_seen[c] else None
+            leaf = self.coordinator.match_request(c, want, L, fingerprint=fp)
+            if leaf is None:
+                continue
+            requests[leaf].append(c)
+            claimed[leaf].append(self.affinity[c].preferred() == leaf)
+
+        # per-cohort resource budget: equal split of the round budget (§4.4);
+        # fixed per leaf-count so padded batch shapes compile once.
+        self._quota = max(2, int(fl.participants_per_round * fl.overcommit / len(leaves)))
+
+        for leaf in leaves:
+            cands = requests[leaf]
+            if len(cands) < 2:
+                continue
+            take = min(self._quota, len(cands))
+            sel_idx = self.rng.choice(len(cands), size=take, replace=False)
+            part = [cands[i] for i in sel_idx]
+            part_claimed = [claimed[leaf][i] for i in sel_idx]
+            self._cohort_round(leaf, part, part_claimed, r)
+
+    def _cohort_round(self, leaf: str, participants: List[int], claimed: List[bool], r: int):
+        fl = self.fl
+        cm = self.cohorts[leaf]
+        n_real = len(participants)
+        pad = self._quota - n_real  # batches padded to a fixed size so every
+        # jit below compiles once per quota (quota changes only on partition)
+        padded = participants + [participants[0]] * pad
+
+        # ② execution: sample local data, flip labels for corrupted clients
+        xs, ys, sizes = [], [], []
+        for c in padded:
+            x, y = self.pop.sample_batch(c, fl.batch_size, fl.local_steps, self.rng)
+            if c in self.corrupted:
+                y = self.rng.integers(0, self.pop.n_classes, size=y.shape).astype(y.dtype)
+            xs.append(x)
+            ys.append(y)
+            sizes.append(len(self.pop.clients[c].y))
+        xs = jnp.asarray(np.stack(xs))
+        ys = jnp.asarray(np.stack(ys))
+        keys = jax.random.split(jax.random.key(self.rng.integers(2**31)), len(padded))
+
+        deltas, losses = self._vmapped_train(cm.params, xs, ys, keys)
+        self.resource_used += n_real * fl.local_steps * fl.batch_size
+
+        # straggler over-commitment drop (system heterogeneity)
+        kept, duration = self.speeds.round_duration(
+            participants,
+            [fl.local_steps * fl.batch_size] * n_real,
+            overcommit=fl.overcommit,
+        )
+        kept_pos = [participants.index(c) for c in kept]
+        kept_set = set(kept_pos)
+        cm.clock += duration
+        cm.rounds += 1
+
+        # ③ aggregation (kept participants only, fixed-shape weighting)
+        losses_np = np.asarray(losses)
+        if fl.qfed_q > 0:
+            w = np.power(np.maximum(losses_np, 1e-6), fl.qfed_q)
+        else:
+            w = np.asarray(sizes, np.float64)
+        w = np.array([w[i] if i in kept_set else 0.0 for i in range(len(padded))])
+        w = jnp.asarray(w / max(w.sum(), 1e-9), jnp.float32)
+        agg = jax.tree.map(lambda d: jnp.tensordot(w, d, axes=1), deltas)
+        cm.params, cm.opt_state = self.server_opt.apply(cm.params, cm.opt_state, agg)
+
+        # ④ feedback stage
+        if not self.auxo.enabled:
+            return
+        sketches = np.asarray(self._vmapped_sketch(deltas))
+        kept_ids = [participants[i] for i in kept_pos]
+        # update client-held fingerprints: center by the round mean (removes
+        # the shared descent direction), normalize, EMA
+        sk_kept = sketches[kept_pos]
+        round_mu = sk_kept.mean(0)
+        if self.global_mu_seen:
+            self.global_mu = 0.8 * self.global_mu + 0.2 * round_mu
+        else:
+            self.global_mu, self.global_mu_seen = round_mu.copy(), True
+        ctr = sk_kept - self.global_mu[None, :]
+        ctr /= np.linalg.norm(ctr, axis=1, keepdims=True) + 1e-9
+        for j, cid in enumerate(kept_ids):
+            if fl.affinity_loss_rate > 0 and self.rng.random() < fl.affinity_loss_rate:
+                self.fingerprint[cid] = 0.0
+                self.fp_seen[cid] = False
+            if self.fp_seen[cid]:
+                self.fingerprint[cid] = (1 - self.fp_beta) * self.fingerprint[cid] + self.fp_beta * ctr[j]
+            else:
+                self.fingerprint[cid] = ctr[j]
+                self.fp_seen[cid] = True
+        # cohort feedback runs on the fingerprints (kept first, then padding)
+        fp = np.zeros((len(padded), sk_kept.shape[1]), np.float32)
+        fp[: len(kept_ids)] = self.fingerprint[kept_ids]
+        sk = jnp.asarray(fp)
+        mask = jnp.asarray(
+            np.array([1.0] * len(kept_pos) + [0.0] * (len(padded) - len(kept_pos)), np.float32)
+        )
+        msgs, event = self.coordinator.feedback(
+            leaf,
+            kept_ids,
+            sk,
+            r,
+            fl.rounds,
+            claimed_preferred=[claimed[i] for i in kept_pos],
+            mask=mask,
+        )
+        known = self.coordinator.tree.leaves()
+        for cid, msg in msgs.items():
+            if msg.reward < 0:
+                self.neg_streak[cid] += 1
+            else:
+                self.neg_streak[cid] = 0
+            if fl.affinity_loss_rate > 0 and self.rng.random() < fl.affinity_loss_rate:
+                self.affinity[cid].wipe()  # unstable client restarts exploring
+                continue
+            self.affinity[cid].update_from_feedback(msg, self.auxo.gamma)
+            self.affinity[cid].propagate_explore(msg.cohort_id, msg.reward, known)
+
+        if event is not None:
+            self._apply_partition(event)
+
+    def _apply_partition(self, event: PartitionEvent):
+        parent = self.cohorts[event.parent]
+        for child in event.children:
+            self.cohorts[child] = CohortModel(
+                params=jax.tree.map(jnp.copy, parent.params),  # warm start
+                opt_state=jax.tree.map(jnp.copy, parent.opt_state),
+                clock=parent.clock,
+                rounds=parent.rounds,
+            )
+        # Algorithm 1 line 22: seed child rewards from parent affinity
+        for c in range(self.pop.n_clients):
+            aff = self.affinity[c]
+            if event.parent in aff.rewards:
+                L = aff.cluster_index.get(event.parent, 0)
+                base = aff.rewards[event.parent]
+                for k, child in event.cluster_to_child.items():
+                    aff.rewards[child] = base + (0.1 if L == k else 0.0)
+                    aff.cluster_index[child] = 0
+
+    # ----------------------------------------------------------------- eval
+    def client_cohort(self, c: int) -> str:
+        """Cohort whose model SERVES client c (evaluation-time routing).
+
+        Fingerprint identity-matching first (the strongest signal; ΔR
+        rewards are only *relative* within a round). An unconfident match
+        falls back to the retained ancestor (generalist) model — a
+        confidently-wrong specialist is worse than the generalist.
+        """
+        aff = self.affinity[c]
+        if self.fp_seen[c]:
+            leaf, margin = self.coordinator.match_with_confidence(self.fingerprint[c])
+            if leaf is not None and margin >= self.auxo.serve_confidence:
+                return leaf
+            if leaf is not None:
+                return "0"  # generalist (pre-partition) model
+        pref = aff.preferred() or "0"
+        L = aff.cluster_index.get(pref, -1)
+        return self.coordinator.match_request(c, pref, L) or "0"
+
+    def evaluate(self, r: int) -> Dict[str, Any]:
+        # per-client accuracy: its serving cohort's model on its group data
+        # (serving may fall back to an ANCESTOR model — see client_cohort)
+        leaves = self.coordinator.tree.leaves()
+        serving = [self.client_cohort(c) for c in range(self.pop.n_clients)]
+        accs_by = {}
+        for cid in set(serving) | set(leaves):
+            p = self.cohorts[cid].params
+            accs_by[cid] = {
+                g: self.task.accuracy(p, self.pop.test_x[g], self.pop.test_y[g])
+                for g in range(self.pop.n_groups)
+            }
+        per_client = np.array(
+            [
+                accs_by[serving[c]][self.pop.clients[c].group]
+                for c in range(self.pop.n_clients)
+            ]
+        )
+        srt = np.sort(per_client)
+        n10 = max(1, len(srt) // 10)
+        clock = max(cm.clock for l, cm in self.cohorts.items() if l in leaves)
+        return {
+            "round": r,
+            "time": clock,
+            "resource": self.resource_used,
+            "acc_mean": float(per_client.mean()),
+            "acc_worst10": float(srt[:n10].mean()),
+            "acc_best10": float(srt[-n10:].mean()),
+            "acc_var": float(per_client.var() * 1e4),  # ×1e-4 like Table 4
+            "n_cohorts": len(leaves),
+            "cohort_accs": {l: float(np.mean(list(a.values()))) for l, a in accs_by.items()},
+            "per_client": per_client,
+        }
+
+    # ------------------------------------------------- FTFA personalization
+    def ftfa_eval(self, steps: int = 5) -> float:
+        """Fine-tune-then-average personalization on top of cohort models."""
+        accs = []
+        for c in range(0, self.pop.n_clients, max(1, self.pop.n_clients // 100)):
+            leaf = self.client_cohort(c)
+            p = self.cohorts[leaf].params
+            x, y = self.pop.sample_batch(c, self.fl.batch_size, steps, self.rng)
+            delta, _ = local_train(
+                self.task.loss, p, jnp.asarray(x), jnp.asarray(y),
+                jax.random.key(0), lr=self.fl.lr
+            )
+            pf = jax.tree.map(lambda a, b: a + b, p, delta)
+            g = self.pop.clients[c].group
+            accs.append(self.task.accuracy(pf, self.pop.test_x[g], self.pop.test_y[g]))
+        return float(np.mean(accs))
+
+
+def run_fl(task, population, fl: FLConfig) -> List[Dict[str, Any]]:
+    """Cohort-agnostic baseline (single global model)."""
+    return AuxoEngine(task, population, fl, AuxoConfig(enabled=False)).run()
+
+
+def run_auxo(
+    task, population, fl: FLConfig, auxo: Optional[AuxoConfig] = None
+) -> Tuple[AuxoEngine, List[Dict[str, Any]]]:
+    eng = AuxoEngine(task, population, fl, auxo or AuxoConfig())
+    hist = eng.run()
+    return eng, hist

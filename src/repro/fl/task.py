@@ -1,0 +1,80 @@
+"""FL task abstraction: a model + loss + eval packaged for the round engine.
+
+MLPTask is the CPU-fast classifier used by the paper-claims benchmarks
+(standing in for the paper's ResNet/ShuffleNet — same population structure,
+tractable on this container). TransformerTask wraps any reduced zoo config
+so the same engine drives LM tasks end-to-end (examples/train_100m.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import dense_init
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPTask:
+    dim: int = 32
+    n_classes: int = 10
+    hidden: int = 64
+    depth: int = 2
+
+    @property
+    def head_paths(self):
+        n = self.depth  # last layer index
+        return (f"'w{n}'", f"'b{n}'")
+
+    def init(self, key) -> Dict[str, Any]:
+        dims = [self.dim] + [self.hidden] * self.depth + [self.n_classes]
+        keys = jax.random.split(key, len(dims) - 1)
+        return {
+            f"w{i}": dense_init(keys[i], (dims[i], dims[i + 1]), jnp.float32)
+            for i in range(len(dims) - 1)
+        } | {f"b{i}": jnp.zeros((dims[i + 1],)) for i in range(len(dims) - 1)}
+
+    def logits(self, params, x):
+        h = x
+        n = self.depth + 1
+        for i in range(n):
+            h = h @ params[f"w{i}"] + params[f"b{i}"]
+            if i < n - 1:
+                h = jax.nn.relu(h)
+        return h
+
+    def loss(self, params, batch) -> jnp.ndarray:
+        x, y = batch
+        lg = self.logits(params, x)
+        return jnp.mean(
+            jax.nn.logsumexp(lg, axis=-1)
+            - jnp.take_along_axis(lg, y[:, None].astype(jnp.int32), axis=1)[:, 0]
+        )
+
+    def accuracy(self, params, x, y) -> float:
+        pred = jnp.argmax(self.logits(params, x), axis=-1)
+        return float(jnp.mean((pred == y).astype(jnp.float32)))
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerTask:
+    """Wraps a (reduced) zoo model as an FL task over token batches."""
+
+    model: Any  # repro.models.zoo.Model
+
+    def init(self, key):
+        return self.model.init(key)
+
+    def loss(self, params, batch) -> jnp.ndarray:
+        tokens = batch[0] if isinstance(batch, tuple) else batch
+        l, _ = self.model.loss(params, {"tokens": tokens})
+        return l
+
+    def accuracy(self, params, x, y=None) -> float:
+        # next-token accuracy
+        logits, _ = self.model.forward(params, {"tokens": x})
+        pred = jnp.argmax(logits[:, :-1], axis=-1)
+        return float(jnp.mean((pred == x[:, 1:]).astype(jnp.float32)))

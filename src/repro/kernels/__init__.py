@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for Auxo's clustering hot-spots.
+
+Each kernel ships three artifacts:
+  <name>.py  — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py     — jit'd public wrappers (padding, dtype policy, interpret switch)
+  ref.py     — pure-jnp oracles used by the property tests
+
+On this CPU container kernels execute via interpret=True; BlockSpecs are
+written for real TPU VMEM (last-dim multiples of 128, f32 accumulation).
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,111 @@
+"""Blocked GQA decode-attention Pallas kernel (beyond-paper serving path).
+
+One query token per sequence attends over a long KV cache: the KV sequence
+is processed in VMEM blocks with a streaming (flash-style) softmax — running
+max `m`, normalizer `l`, and accumulator `acc` live in VMEM scratch across
+KV blocks. This is the compute hot-spot of decode_32k / long_500k serving.
+
+Grid: (B, S/bs) with the KV axis innermost ("arbitrary" semantics).
+Layout: q (B, H, hd), k/v (B, S, Hkv, hd); GQA broadcast done by reshaping
+q to (Hkv, g·hd) tiles — heads stay hardware-aligned when hd is a multiple
+of 128 (ops.py pads).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(q_ref, k_ref, v_ref, len_ref, o_ref, acc, m_s, l_s, *, ns: int, hd: int, group: int):
+    s = pl.program_id(1)
+
+    @pl.when(s == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, -1e30)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    q = q_ref[0].astype(jnp.float32)  # (H, hd) H = Hkv*group
+    k = k_ref[0].astype(jnp.float32)  # (bs, Hkv, hd)
+    v = v_ref[0].astype(jnp.float32)  # (bs, Hkv, hd)
+    bs, hkv, _ = k.shape
+    H = q.shape[0]
+
+    # scores[h, t] = <q[h], k[t, h // group]> / sqrt(hd)
+    qg = q.reshape(hkv, group, hd)
+    scores = jax.lax.dot_general(
+        qg, k, (((2,), (2,)), ((0,), (1,))), preferred_element_type=jnp.float32
+    )  # (Hkv, group, bs)
+    scores = scores.reshape(H, bs) / math.sqrt(hd)
+
+    # validity: global kv index < cache length
+    t0 = s * bs
+    idx = t0 + jax.lax.broadcasted_iota(jnp.int32, (H, bs), 1)
+    valid = idx < len_ref[0, 0]
+    scores = jnp.where(valid, scores, -1e30)
+
+    # streaming softmax update
+    m_prev = m_s[...]  # (H, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new)  # (H, bs)
+    l_s[...] = l_s[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    pg = p.reshape(hkv, group, bs)
+    pv = jax.lax.dot_general(
+        pg, v, (((2,), (0,)), ((0,), (1,))), preferred_element_type=jnp.float32
+    )  # (Hkv, group, hd)
+    acc[...] = acc[...] * alpha + pv.reshape(H, hd)
+    m_s[...] = m_new
+
+    @pl.when(s == ns - 1)
+    def _done():
+        o_ref[0] = (acc[...] / jnp.maximum(l_s[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    length: jnp.ndarray,
+    *,
+    block_s: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """q: (B, H, hd); k, v: (B, S, Hkv, hd); length: (B,) valid KV count.
+
+    Returns (B, H, hd). S % block_s == 0 (ops.py pads).
+    """
+    B, H, hd = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    group = H // Hkv
+    bs = min(block_s, S)
+    assert S % bs == 0, (S, bs)
+    ns = S // bs
+    len2d = length.reshape(B, 1).astype(jnp.int32)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, ns=ns, hd=hd, group=group),
+        grid=(B, ns),
+        in_specs=[
+            pl.BlockSpec((1, H, hd), lambda b, s: (b, 0, 0)),
+            pl.BlockSpec((1, bs, Hkv, hd), lambda b, s: (b, s, 0, 0)),
+            pl.BlockSpec((1, bs, Hkv, hd), lambda b, s: (b, s, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, s: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, hd), lambda b, s: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((H, hd), jnp.float32),
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(q, k, v, len2d)

@@ -1,0 +1,96 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles padding to tile multiples, dtype policy, and the CPU fallback:
+on non-TPU backends kernels execute in interpret mode (the kernel body runs
+in Python on CPU), so correctness is validated everywhere while BlockSpecs
+target real TPU VMEM tiling.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import cosine_sim as _cs
+from repro.kernels import decode_attention as _da
+from repro.kernels import segment_aggregate as _sa
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@partial(jax.jit, static_argnames=("block_p", "block_d"))
+def cosine_similarity(
+    x: jnp.ndarray, c: jnp.ndarray, block_p: int = 128, block_d: int = 512
+) -> jnp.ndarray:
+    """x: (P, D), c: (K, D) -> (P, K) cosine sims. Pads to tile multiples."""
+    P, D = x.shape
+    K = c.shape[0]
+    bp = min(block_p, max(8, P))
+    bd = min(block_d, max(128, D))
+    xp = _pad_to(_pad_to(x, 0, bp), 1, bd)
+    cp = _pad_to(c, 1, bd)
+    # padded centroid rows have zero norm -> sims 0 after eps guard; padded
+    # x rows likewise. K stays un-tiled (small); pad to lane multiple of 8.
+    cp = _pad_to(cp, 0, 8)
+    out = _cs.cosine_similarity(xp, cp, block_p=bp, block_d=bd, interpret=_interpret())
+    return out[:P, :K]
+
+
+@partial(jax.jit, static_argnames=("num_segments", "block_p", "block_d"))
+def segment_aggregate(
+    data: jnp.ndarray,
+    segment_ids: jnp.ndarray,
+    num_segments: int,
+    weights: Optional[jnp.ndarray] = None,
+    block_p: int = 256,
+    block_d: int = 512,
+) -> jnp.ndarray:
+    """data: (P, D); ids: (P,) -> (K, D) weighted segment sums."""
+    P, D = data.shape
+    bp = min(block_p, max(8, P))
+    bd = min(block_d, max(128, D))
+    dp = _pad_to(_pad_to(data, 0, bp), 1, bd)
+    Ppad = dp.shape[0]
+    ids = jnp.full((Ppad, 1), -1, jnp.int32).at[:P, 0].set(segment_ids.astype(jnp.int32))
+    w = jnp.zeros((Ppad, 1), jnp.float32)
+    w = w.at[:P, 0].set(jnp.ones((P,)) if weights is None else weights.astype(jnp.float32))
+    ks = max(8, num_segments)
+    out = _sa.segment_aggregate(
+        dp, ids, ks, w, block_p=bp, block_d=bd, interpret=_interpret()
+    )
+    return out[:num_segments, :D]
+
+
+@partial(jax.jit, static_argnames=("block_s",))
+def decode_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    length: jnp.ndarray,
+    block_s: int = 512,
+) -> jnp.ndarray:
+    """GQA decode attention over a long KV cache (flash-decode).
+
+    q: (B, H, hd); k, v: (B, S, Hkv, hd); length: scalar or (B,).
+    Pads S to a block multiple (padded slots are masked by `length`).
+    """
+    B, H, hd = q.shape
+    S = k.shape[1]
+    bs = min(block_s, max(128, S))
+    kp = _pad_to(k, 1, bs)
+    vp = _pad_to(v, 1, bs)
+    lb = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (B,))
+    return _da.decode_attention(q, kp, vp, lb, block_s=bs, interpret=_interpret())

@@ -1,0 +1,273 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) on the
+production mesh, prove memory fits, and extract roofline terms.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-2b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh single|multi|both]
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json and are
+aggregated by benchmarks/roofline.py into EXPERIMENTS.md §Roofline.
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.shapes import SHAPES
+from repro.launch import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (
+    TRAIN_CLIENTS,
+    effective_config,
+    flat_batch_specs,
+    input_specs,
+)
+from repro.launch.steps import (
+    StepConfig,
+    clustering_init,
+    make_central_train_step,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+    yogi_init,
+)
+from repro.models.zoo import build_model
+from repro.utils import hlo as hlo_util
+
+# archs whose params cannot be replicated per data shard: FSDP + centralized
+FSDP_ARCHS = {"qwen3-moe-235b-a22b", "llama4-maverick-400b-a17b"}
+
+OUT_DIR = Path("experiments/dryrun")
+
+
+def _pattern_len(cfg) -> int:
+    """Layers per repeating unit (superblock) of this family."""
+    if cfg.family == "hybrid":
+        return cfg.attn_every
+    if cfg.family == "ssm":
+        return cfg.slstm_every
+    if cfg.is_moe_arch and cfg.moe_interleave > 1:
+        return cfg.moe_interleave
+    return 1
+
+
+def _with_units(cfg, units: int):
+    """Shrink the config to `units` repeating units (probe lowering)."""
+    return cfg.replace(n_layers=_pattern_len(cfg) * units)
+
+
+def _compile_one(cfg, cfg0, shape, mesh, policy, step_cfg, seq_shard_cache=False):
+    """Lower + compile one step function; returns (compiled, lowered)."""
+    model = build_model(cfg)
+    pshapes = model.init_shapes()
+    pshard = shd.param_shardings(pshapes, mesh, policy)
+    if shape.kind == "train" and policy == "fsdp":
+        # centralized (mode B) step consumes the flat (B, S) batch
+        batch = flat_batch_specs(cfg, shape)
+    else:
+        batch = input_specs(cfg0, shape.name)
+    # dp policy: weights replicated, the model axis carries the sequence
+    bshard = shd.batch_shardings(batch, mesh, seq_shard=(policy == "dp"))
+    repl = shd.replicated(mesh)
+
+    if shape.kind == "train":
+        clust = jax.eval_shape(lambda: clustering_init(step_cfg.cluster_k, step_cfg.d_sketch))
+        opt = jax.eval_shape(lambda: yogi_init(pshapes))
+        oshard = {k: shd.param_shardings(v, mesh, "fsdp") for k, v in opt.items()}
+        cshard = jax.tree.map(lambda _: repl, clust)
+        if policy == "fsdp":
+            fn = make_central_train_step(model, step_cfg, n_clients=TRAIN_CLIENTS)
+        else:
+            fn = make_train_step(model, step_cfg)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(pshard, oshard, cshard, bshard),
+            out_shardings=(pshard, oshard, cshard, None),
+            donate_argnums=(0, 1, 2),
+        )
+        with mesh:
+            lowered = jitted.lower(pshapes, opt, clust, batch)
+    elif shape.kind == "prefill":
+        fn = make_prefill_step(model, step_cfg)
+        jitted = jax.jit(fn, in_shardings=(pshard, bshard))
+        with mesh:
+            lowered = jitted.lower(pshapes, batch)
+    else:  # decode
+        cache = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len, jnp.bfloat16)
+        )
+        cache_shard = shd.cache_shardings(cache, shape.global_batch, mesh, seq_shard_cache)
+        fn = make_serve_step(model, step_cfg)
+        jitted = jax.jit(
+            fn,
+            in_shardings=(pshard, cache_shard, bshard),
+            out_shardings=(None, cache_shard),
+            donate_argnums=(1,),
+        )
+        with mesh:
+            lowered = jitted.lower(pshapes, cache, batch)
+    return lowered.compile()
+
+
+def lower_one(arch: str, shape_name: str, multi_pod: bool, policy_override=None,
+              step_cfg: StepConfig = None, extra_tag: str = "", probes: bool = True,
+              cfg_overrides: dict = None, seq_shard_cache: bool = False):
+    """Lower + compile one (arch, shape, mesh) and return the report dict.
+
+    Deployment lowering uses lax.scan over layers (production path, proves
+    sharding + memory). Roofline terms come from two small UNROLLED probes
+    (1 and 2 repeating units): HloCostAnalysis counts while-loop bodies
+    once, so per-unit cost = cost(2u) − cost(1u) and the full-depth terms
+    extrapolate as base + per_unit × n_units. Probes run on the single-pod
+    mesh only (§Roofline is single-pod by spec).
+    """
+    t0 = time.time()
+    cfg0 = get_config(arch)
+    shape = SHAPES[shape_name]
+    cfg = effective_config(cfg0, shape).replace(dtype=jnp.bfloat16)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    policy = policy_override or ("fsdp" if cfg0.arch_id in FSDP_ARCHS else "tp")
+    step_cfg = step_cfg or StepConfig()
+
+    # 1) deployment lowering (scan over layers): sharding + memory proof
+    compiled = _compile_one(cfg, cfg0, shape, mesh, policy, step_cfg, seq_shard_cache)
+    mem = hlo_util.memory_summary(compiled)
+    deploy_compile_s = time.time() - t0
+
+    # 2) roofline probes (single-pod only, unrolled 1 vs 2 units)
+    roof = None
+    if probes and not multi_pod:
+        plen = _pattern_len(cfg)
+        n_units = cfg.n_layers / plen
+        c1 = _compile_one(_with_units(cfg.replace(unroll=True), 1), cfg0, shape, mesh,
+                          policy, step_cfg, seq_shard_cache)
+        r1 = hlo_util.analyze(c1)
+        c2 = _compile_one(_with_units(cfg.replace(unroll=True), 2), cfg0, shape, mesh,
+                          policy, step_cfg, seq_shard_cache)
+        r2 = hlo_util.analyze(c2)
+
+        def extrap(a1, a2):
+            per_unit = max(a2 - a1, 0.0)
+            base = max(a1 - per_unit, 0.0)
+            return base + per_unit * n_units
+
+        roof = hlo_util.Roofline(
+            flops=extrap(r1.flops, r2.flops),
+            bytes_accessed=extrap(r1.bytes_accessed, r2.bytes_accessed),
+            coll_bytes=extrap(r1.coll_bytes, r2.coll_bytes),
+            coll_by_op={
+                k: extrap(r1.coll_by_op[k], r2.coll_by_op[k]) for k in r1.coll_by_op
+            },
+        )
+    else:
+        roof = hlo_util.analyze(compiled)  # scan-based (while bodies ×1)
+
+    model = build_model(cfg)
+    n_params = model.param_count()
+    n_active = model.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6 if shape.kind == "train" else 2
+    model_flops = mult * n_active * tokens
+    n_dev = mesh.size
+    hlo_flops_global = roof.flops * n_dev
+
+    report = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "policy": policy,
+        "kind": shape.kind,
+        "variant": ("sliding_window" if cfg.sliding_window and not cfg0.sliding_window else "native"),
+        "overrides": cfg_overrides or {},
+        "tag": extra_tag,
+        "params": n_params,
+        "active_params": n_active,
+        "tokens": tokens,
+        "model_flops": model_flops,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_flops_ratio": model_flops / hlo_flops_global if hlo_flops_global else 0.0,
+        "roofline": roof.as_dict(),
+        "roofline_extrapolated": bool(probes and not multi_pod),
+        "memory": mem,
+        "deploy_compile_s": deploy_compile_s,
+        "compile_s": time.time() - t0,
+    }
+    return report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--policy", default=None, choices=[None, "tp", "fsdp", "ep", "dp"])
+    ap.add_argument("--accum", type=int, default=1,
+                    help="§Perf: gradient-accumulation microbatches (centralized mode)")
+    ap.add_argument("--cache-seq-shard", action="store_true",
+                    help="§Perf: shard decode caches over sequence (flash-decode)")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config overrides for §Perf variants, e.g. --set vocab_pad=49168")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default=str(OUT_DIR))
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.all or args.arch is None else [args.arch]
+    shapes = list(SHAPES) if args.all or args.shape is None else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    failures = []
+    for arch in archs:
+        arch = arch.replace("_", "-") if "-" not in arch else arch
+        for shape in shapes:
+            for multi in meshes:
+                mesh_tag = "2x16x16" if multi else "16x16"
+                name = f"{arch}__{shape}__{mesh_tag}" + (f"__{args.tag}" if args.tag else "")
+                step_cfg = StepConfig(accum_steps=args.accum) if args.accum != 1 else None
+                overrides = {}
+                for kv in args.set:
+                    k, v = kv.split("=", 1)
+                    overrides[k] = v if not v.lstrip("-").isdigit() else int(v)
+                try:
+                    rep = lower_one(arch, shape, multi, args.policy,
+                                    step_cfg=step_cfg,
+                                    extra_tag=args.tag, cfg_overrides=overrides or None,
+                                    seq_shard_cache=args.cache_seq_shard)
+                    (outdir / f"{name}.json").write_text(json.dumps(rep, indent=2))
+                    r = rep["roofline"]
+                    print(
+                        f"OK  {name:60s} compute={r['compute_s']*1e3:8.2f}ms "
+                        f"memory={r['memory_s']*1e3:8.2f}ms coll={r['collective_s']*1e3:8.2f}ms "
+                        f"bottleneck={r['bottleneck']:10s} compile={rep['compile_s']:.0f}s",
+                        flush=True,
+                    )
+                except Exception as e:  # noqa: BLE001
+                    failures.append((name, repr(e)))
+                    print(f"FAIL {name}: {e}", flush=True)
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} failures:")
+        for n, e in failures:
+            print(" ", n, e)
+        raise SystemExit(1)
+    print("\nall dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run must set XLA_FLAGS before any jax
+device initialization.
+
+Production target: TPU v5e pods. Single pod = 256 chips as (data=16,
+model=16); multi-pod = 2 pods = 512 chips as (pod=2, data=16, model=16).
+Hardware constants for the roofline are in repro/utils/hlo.py.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple:
+    """The axes the batch/client dimension shards over."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def data_size(mesh) -> int:
+    size = 1
+    for a in data_axes(mesh):
+        size *= mesh.shape[a]
+    return size
+
+
+def model_size(mesh) -> int:
+    return mesh.shape["model"]

@@ -1,0 +1,58 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Collective-traffic profiler for the §Perf loop.
+
+Compiles a small unrolled probe (2 repeating units) of one (arch, shape)
+and prints the largest collective instructions — the 'profile' that drives
+each hypothesis → change → measure iteration.
+
+  PYTHONPATH=src python -m repro.launch.profile --arch granite-3-2b --shape train_4k
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.shapes import SHAPES
+from repro.launch.dryrun import FSDP_ARCHS, _compile_one, _pattern_len, _with_units
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import effective_config
+from repro.launch.steps import StepConfig
+from repro.utils.hlo import collective_bytes, top_collectives
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--units", type=int, default=2)
+    ap.add_argument("--policy", default=None)
+    ap.add_argument("--top", type=int, default=20)
+    args = ap.parse_args()
+
+    cfg0 = get_config(args.arch)
+    shape = SHAPES[args.shape]
+    cfg = effective_config(cfg0, shape).replace(dtype=jnp.bfloat16, unroll=True)
+    cfg = _with_units(cfg, args.units)
+    mesh = make_production_mesh(multi_pod=False)
+    policy = args.policy or ("fsdp" if cfg0.arch_id in FSDP_ARCHS else "tp")
+    compiled = _compile_one(cfg, cfg0, shape, mesh, policy, StepConfig())
+    text = compiled.as_text()
+    total = collective_bytes(text)
+    print(f"== {args.arch} × {args.shape} ({args.units} units, {policy}) ==")
+    print("per-device collective bytes by op:")
+    for k, v in total.items():
+        print(f"  {k:20s} {v/1e9:8.3f} GB")
+    print(f"\ntop {args.top} collective instructions (total-bytes, count, bytes-each, op, shape):")
+    for tot, cnt, b, op, sh in top_collectives(text, args.top):
+        print(f"  {tot/1e9:8.3f} GB  x{cnt:<4d} {b/1e6:9.2f} MB  {op:20s} {sh}")
+
+
+if __name__ == "__main__":
+    main()

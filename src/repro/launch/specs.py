@@ -1,0 +1,88 @@
+"""Abstract input specs (ShapeDtypeStruct) per (architecture × input shape).
+
+No device allocation: these feed jax.jit(...).lower() for the dry-run, and
+document exactly what each step consumes.
+
+Shapes follow the assigned table: train_4k (4096×256), prefill_32k
+(32768×32), decode_32k (32768×128, one new token), long_500k (524288×1).
+For VLM the sequence is patches + text (the vision frontend is stubbed per
+the carve-out: image patch embeddings arrive precomputed); for audio tokens
+carry a codebook axis.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import SHAPES, InputShape
+from repro.models.common import ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+# federated-simulation granularity: clients per round in the SPMD step.
+# 32 divides both the single-pod (16) and multi-pod (32) data extents.
+TRAIN_CLIENTS = 32
+
+
+def effective_config(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Arch variant actually lowered for this shape.
+
+    long_500k requires sub-quadratic attention: SSM/hybrid archs run
+    natively; attention archs run their sliding-window variant (window
+    4096; h2o-danube-3-4b's native SWA already is one). Recorded per run in
+    EXPERIMENTS.md.
+    """
+    if shape.name == "long_500k" and cfg.family != "ssm" and cfg.sliding_window == 0:
+        return cfg.replace(sliding_window=4096)
+    return cfg
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """Batch pytree for the federated train step: (clients, per-client batch, seq)."""
+    C = TRAIN_CLIENTS
+    B, S = shape.global_batch, shape.seq_len
+    assert B % C == 0, (B, C)
+    m = B // C
+    if cfg.n_codebooks:
+        return {"tokens": SDS((C, m, cfg.n_codebooks, S), jnp.int32)}
+    if cfg.family == "vlm":
+        p = cfg.vision_patches
+        return {
+            "tokens": SDS((C, m, S - p), jnp.int32),
+            "image_embeds": SDS((C, m, p, cfg.d_model), jnp.bfloat16),
+        }
+    return {"tokens": SDS((C, m, S), jnp.int32)}
+
+
+def flat_batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """Batch pytree for the centralized train / prefill step: (B, S)."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.n_codebooks:
+        return {"tokens": SDS((B, cfg.n_codebooks, S), jnp.int32)}
+    if cfg.family == "vlm":
+        p = cfg.vision_patches
+        return {
+            "tokens": SDS((B, S - p), jnp.int32),
+            "image_embeds": SDS((B, p, cfg.d_model), jnp.bfloat16),
+        }
+    return {"tokens": SDS((B, S), jnp.int32)}
+
+
+def decode_token_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    B = shape.global_batch
+    if cfg.n_codebooks:
+        return {"tokens": SDS((B, cfg.n_codebooks, 1), jnp.int32)}
+    return {"tokens": SDS((B, 1), jnp.int32)}
+
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> Dict[str, Any]:
+    """Public entry: every model input for this (arch, shape) as SDS."""
+    shape = SHAPES[shape_name]
+    cfg = effective_config(cfg, shape)
+    if shape.kind == "train":
+        return train_batch_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return flat_batch_specs(cfg, shape)
+    return decode_token_specs(cfg, shape)

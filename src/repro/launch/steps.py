@@ -1,0 +1,272 @@
+"""Distributed step functions: the FL round as one SPMD program.
+
+Two training modes (DESIGN.md §5):
+
+- ``federated``  (default) — the paper-faithful FL round: the client axis
+  shards over (`pod`,`data`); every data shard carries a TP model replica
+  and simulates its clients' local SGD (lax.scan over local steps); each
+  client's delta is sketched (last-block JL projection), sketches are
+  (all-)gathered, Auxo's online clustering assigns/refreshes prototypes and
+  computes rewards, and the cohort-weighted aggregate feeds the server
+  optimizer (FedYoGi). One pjit program = one cohort round.
+
+- ``centralized`` — for the 100B+ MoE archs whose per-client deltas cannot
+  be replicated (FSDP param sharding): a standard data-parallel step whose
+  "clients" are batch groups; per-client sketches come from the LM-head
+  gradient w.r.t. the final hidden states (cheap vjp through the head
+  only), which is the label-skew fingerprint at scale.
+
+Serving: ``make_serve_step`` decodes ONE token against the KV/recurrent
+cache (ring-buffered for sliding-window variants).
+
+The clustering math here is the pure-jnp mirror of repro/kernels/ref.py —
+inside the SPMD program the arrays are tiny ((C, d_sketch)); the Pallas
+kernels serve the host-side engine where P reaches thousands.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sketch import GradientSketcher
+from repro.models.common import ModelConfig
+from repro.models.zoo import Model, build_model
+from repro.utils import tree_add, tree_scale, tree_sub, tree_zeros_like
+
+
+# ---------------------------------------------------------------------------
+# Distributed Auxo clustering state (per cohort, carried across rounds)
+# ---------------------------------------------------------------------------
+def clustering_init(k: int, d_sketch: int) -> Dict[str, jnp.ndarray]:
+    return {
+        "centroids": jnp.zeros((k, d_sketch), jnp.float32),
+        "counts": jnp.zeros((k,), jnp.float32),
+        "initialized": jnp.zeros((), jnp.float32),
+    }
+
+
+def clustering_update(state, sketches: jnp.ndarray, ema: float = 0.3):
+    """Pure-jnp Algorithm-1 round: center, normalize, assign, EMA refresh,
+    instant rewards. sketches: (C, d)."""
+    x = sketches.astype(jnp.float32)
+    mu = jnp.mean(x, axis=0, keepdims=True)
+    xc = x - mu
+    xn = xc / (jnp.linalg.norm(xc, axis=1, keepdims=True) + 1e-8)
+    k = state["centroids"].shape[0]
+
+    # bootstrap: first round uses deterministic seeding (top-2 most
+    # anti-correlated rows stand in for kmeans++ inside the jit)
+    sims_all = xn @ xn.T
+    seed0 = jnp.argmax(jnp.sum(sims_all, axis=1))
+    seed1 = jnp.argmin(sims_all[seed0])
+    boot = jnp.stack([xn[seed0], xn[seed1]] + [xn[(seed0 + i) % xn.shape[0]] for i in range(2, k)])
+    cents = jnp.where(state["initialized"] > 0, state["centroids"], boot)
+
+    sims = xn @ cents.T  # (C, K)
+    assign = jnp.argmax(sims, axis=1)
+    onehot = jax.nn.one_hot(assign, k, dtype=jnp.float32)  # (C, K)
+    sums = onehot.T @ xn
+    counts = onehot.sum(0)
+    batch_cent = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1.0), cents)
+    new_cents = (1 - ema) * cents + ema * batch_cent
+    new_cents = new_cents / (jnp.linalg.norm(new_cents, axis=1, keepdims=True) + 1e-8)
+
+    # instant rewards (paper §4.3): ΔR = 1 − D/(avg(D)+std(D))
+    d = jnp.linalg.norm(x - mu, axis=1)
+    thr = jnp.mean(d) + jnp.std(d)
+    rewards = 1.0 - d / jnp.maximum(thr, 1e-9)
+
+    picked = jnp.take_along_axis(sims, assign[:, None], axis=1)[:, 0]
+    new_state = {
+        "centroids": new_cents,
+        "counts": state["counts"] + counts,
+        "initialized": jnp.ones((), jnp.float32),
+    }
+    metrics = {
+        "assign": assign,
+        "rewards": rewards,
+        "dispersion": 1.0 - jnp.mean(picked),
+        "cluster_counts": counts,
+    }
+    return new_state, metrics
+
+
+# ---------------------------------------------------------------------------
+# Server optimizer (FedYoGi) as pure functions over pytrees
+# ---------------------------------------------------------------------------
+def yogi_init(params):
+    return {
+        "m": tree_zeros_like(params),
+        "v": jax.tree.map(lambda x: jnp.full_like(x, 1e-6, dtype=jnp.float32), params),
+    }
+
+
+def yogi_apply(params, state, delta, lr=0.02, beta1=0.9, beta2=0.99, tau=1e-3):
+    m = jax.tree.map(lambda m, d: beta1 * m + (1 - beta1) * d.astype(m.dtype), state["m"], delta)
+    v = jax.tree.map(
+        lambda v, d: v - (1 - beta2) * (d * d).astype(v.dtype) * jnp.sign(v - (d * d).astype(v.dtype)),
+        state["v"],
+        delta,
+    )
+    new = jax.tree.map(
+        lambda p, mm, vv: (p.astype(jnp.float32) + lr * mm.astype(jnp.float32) / (jnp.sqrt(vv) + tau)).astype(p.dtype),
+        params,
+        m,
+        v,
+    )
+    return new, {"m": m, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# Federated-simulation train step (mode A)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class StepConfig:
+    local_steps: int = 2
+    client_lr: float = 0.02
+    server_lr: float = 0.02
+    clip_norm: float = 1.0  # client-side gradient clipping (0 = off)
+    accum_steps: int = 1  # centralized mode: gradient-accumulation microbatches
+    cluster_k: int = 2
+    d_sketch: int = 256
+    window: int = -1  # attention window override (-1 = config default)
+
+
+def make_train_step(model: Model, step_cfg: StepConfig) -> Callable:
+    cfg = model.cfg
+    sketcher = GradientSketcher(d_sketch=step_cfg.d_sketch, strategy="last_block_proj")
+
+    def client_update(params, batch_c):
+        """One client's local training. batch_c leaves: (m, ...)."""
+        m = batch_c["tokens"].shape[0]
+        ls = step_cfg.local_steps if m % step_cfg.local_steps == 0 else 1
+        mb = m // ls
+        split = jax.tree.map(lambda a: a.reshape(ls, mb, *a.shape[1:]), batch_c)
+
+        def sgd(p, micro):
+            (loss, metr), grads = jax.value_and_grad(model.loss, has_aux=True)(
+                p, micro, step_cfg.window
+            )
+            if step_cfg.clip_norm > 0:
+                gn = jnp.sqrt(
+                    sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+                )
+                scale = jnp.minimum(1.0, step_cfg.clip_norm / jnp.maximum(gn, 1e-9))
+                grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+            p = jax.tree.map(lambda w, g: (w - step_cfg.client_lr * g).astype(w.dtype), p, grads)
+            return p, loss
+
+        if cfg.unroll:  # dry-run cost analysis: no while loops
+            final, acc = params, 0.0
+            for i in range(ls):
+                final, l = sgd(final, jax.tree.map(lambda a: a[i], split))
+                acc = acc + l
+            delta = tree_sub(final, params)
+            return delta, acc / ls
+        final, losses = jax.lax.scan(sgd, params, split)
+        delta = tree_sub(final, params)
+        return delta, jnp.mean(losses)
+
+    def train_step(params, opt_state, clust_state, batch):
+        """One cohort FL round. batch leaves: (C, m, ...), C over data axes."""
+        deltas, losses = jax.vmap(client_update, in_axes=(None, 0))(params, batch)
+
+        # per-client gradient sketches (JL projection of the last block)
+        sketches = jax.vmap(sketcher)(deltas)  # (C, d_sketch)
+        clust_state, cmetrics = clustering_update(clust_state, sketches)
+
+        # cohort-weighted aggregation: uniform here (one cohort per step);
+        # rewards weight outliers down (robust aggregation, §5.2)
+        w = jnp.maximum(cmetrics["rewards"], 0.0) + 1e-3
+        w = w / jnp.sum(w)
+        agg = jax.tree.map(lambda d: jnp.tensordot(w.astype(d.dtype), d, axes=1), deltas)
+
+        params, opt_state = yogi_apply(params, opt_state, agg, lr=step_cfg.server_lr)
+        metrics = {
+            "loss": jnp.mean(losses),
+            "dispersion": cmetrics["dispersion"],
+            "cluster_counts": cmetrics["cluster_counts"],
+            "reward_mean": jnp.mean(cmetrics["rewards"]),
+        }
+        return params, opt_state, clust_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Centralized train step (mode B — FSDP archs)
+# ---------------------------------------------------------------------------
+def make_central_train_step(model: Model, step_cfg: StepConfig, n_clients: int = 32) -> Callable:
+    cfg = model.cfg
+    from repro.models import transformer
+
+    def train_step(params, opt_state, clust_state, batch):
+        """batch leaves: (B, ...) with B = global batch over data axes."""
+
+        def loss_fn(p):
+            hidden, aux = transformer.forward_hidden(p, cfg, batch, step_cfg.window)
+            ce = transformer.head_ce(p, cfg, hidden, batch["tokens"])
+            loss = ce + 0.01 * aux.get("lb_loss", 0.0) + 1e-3 * aux.get("z_loss", 0.0)
+            return loss, hidden
+
+        (loss, hidden), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+        # per-client sketches: LM-head gradient w.r.t. final hidden states,
+        # client = contiguous batch group. Differentiates through the head
+        # only (cheap), pooled over tokens, JL-projected.
+        B = hidden.shape[0]
+        C = min(n_clients, B)
+        hc = hidden.reshape(C, B // C, *hidden.shape[1:])
+        tok = batch["tokens"]
+        tc = tok.reshape(C, B // C, *tok.shape[1:])
+
+        def head_grad(h_c, t_c):
+            g = jax.grad(lambda h: transformer.head_ce(params, cfg, h, t_c))(h_c)
+            return jnp.sum(g.astype(jnp.float32), axis=tuple(range(g.ndim - 1)))  # (D,)
+
+        pooled = jax.vmap(head_grad)(hc, tc)  # (C, D)
+        proj = jax.random.rademacher(
+            jax.random.key(1234), (cfg.d_model, step_cfg.d_sketch), jnp.float32
+        )
+        sketches = pooled @ proj / jnp.sqrt(jnp.float32(cfg.d_model))
+        clust_state, cmetrics = clustering_update(clust_state, sketches)
+
+        neg = tree_scale(grads, -1.0)  # pseudo-delta: one descent direction
+        params, opt_state = yogi_apply(params, opt_state, neg, lr=step_cfg.server_lr)
+        metrics = {
+            "loss": loss,
+            "dispersion": cmetrics["dispersion"],
+            "cluster_counts": cmetrics["cluster_counts"],
+            "reward_mean": jnp.mean(cmetrics["rewards"]),
+        }
+        return params, opt_state, clust_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode steps (serving)
+# ---------------------------------------------------------------------------
+def make_prefill_step(model: Model, step_cfg: StepConfig) -> Callable:
+    """Serving prefill: full forward, logits for the LAST position only
+    (the decode loop continues from there; materializing (B,S,V) logits for
+    150k vocabs would dominate memory for no reason)."""
+    from repro.models import transformer
+
+    def prefill_step(params, batch):
+        hidden, _ = transformer.forward_hidden(params, model.cfg, batch, step_cfg.window)
+        return transformer.lm_logits(params, model.cfg, hidden[:, -1:])
+
+    return prefill_step
+
+
+def make_serve_step(model: Model, step_cfg: StepConfig) -> Callable:
+    def serve_step(params, cache, batch):
+        logits, cache = model.decode_step(params, batch["tokens"], cache, step_cfg.window)
+        return logits, cache
+
+    return serve_step

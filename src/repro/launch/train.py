@@ -1,0 +1,110 @@
+"""Distributed training driver: runs the Auxo FL round step on the local
+device set (the same program the dry-run lowers for the production mesh).
+
+  PYTHONPATH=src python -m repro.launch.train --arch granite-3-2b \\
+      --d-model 512 --layers 8 --rounds 100 --checkpoint-every 50
+
+On this CPU container the mesh is (1, n_local_devices); on a real pod the
+same code builds (16, 16) per pod. Checkpoints cover params + optimizer +
+clustering state (cohort failover, §5.2).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_pytree, save_pytree
+from repro.configs import get_config
+from repro.launch import sharding as shd
+from repro.launch.steps import StepConfig, clustering_init, make_train_step, yogi_init
+from repro.models import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--d-model", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--vocab", type=int, default=4096)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=100)
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).replace(
+        n_layers=args.layers,
+        d_model=args.d_model,
+        n_heads=8,
+        n_kv_heads=4,
+        d_ff=4 * args.d_model,
+        vocab=args.vocab,
+        ce_chunk=128,
+        attn_qchunk=0,
+    )
+    if cfg.family == "hybrid":
+        cfg = cfg.replace(ssm_heads=8, attn_every=2)
+    if cfg.family == "ssm":
+        cfg = cfg.replace(slstm_every=2)
+    model = build_model(cfg)
+    print(f"{args.arch}: {model.param_count()/1e6:.1f}M params")
+
+    n_dev = jax.device_count()
+    mesh = jax.make_mesh((n_dev, 1), ("data", "model"))
+    sc = StepConfig(local_steps=2, client_lr=0.05, server_lr=0.03, d_sketch=128)
+    step = make_train_step(model, sc)
+
+    key = jax.random.key(0)
+    params = model.init(key)
+    opt = yogi_init(params)
+    clust = clustering_init(sc.cluster_k, sc.d_sketch)
+
+    ckpt = Path(args.ckpt_dir)
+    ckpt.mkdir(parents=True, exist_ok=True)
+    if args.resume and (ckpt / "params.npz").exists():
+        params = load_pytree(ckpt / "params.npz", params)
+        opt = load_pytree(ckpt / "opt.npz", opt)
+        clust = load_pytree(ckpt / "clust.npz", clust)
+        print("resumed from", ckpt)
+
+    pshard = shd.param_shardings(jax.eval_shape(lambda: params), mesh, "tp")
+    oshard = {k: shd.param_shardings(jax.eval_shape(lambda: v), mesh, "fsdp") for k, v in opt.items()}
+    cshard = jax.tree.map(lambda _: shd.replicated(mesh), clust)
+    jstep = jax.jit(
+        step,
+        in_shardings=(pshard, oshard, cshard, None),
+        out_shardings=(pshard, oshard, cshard, None),
+        donate_argnums=(0, 1, 2),
+    )
+
+    rng = np.random.default_rng(0)
+    m = 2
+    t0 = time.time()
+    with mesh:
+        for r in range(args.rounds):
+            toks = jnp.asarray(
+                rng.integers(0, cfg.vocab, size=(args.clients, m, args.seq)), jnp.int32
+            )
+            params, opt, clust, metrics = jstep(params, opt, clust, {"tokens": toks})
+            if r % max(1, args.rounds // 10) == 0:
+                print(
+                    f"round {r:4d} loss {float(metrics['loss']):.4f} "
+                    f"disp {float(metrics['dispersion']):.3f} ({time.time()-t0:.0f}s)"
+                )
+            if args.checkpoint_every and (r + 1) % args.checkpoint_every == 0:
+                save_pytree(ckpt / "params.npz", params)
+                save_pytree(ckpt / "opt.npz", opt)
+                save_pytree(ckpt / "clust.npz", clust)
+                print("checkpointed at round", r)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Model zoo: the 10 assigned architectures as composable JAX modules."""
+from repro.models.common import ModelConfig
+from repro.models.zoo import build_model, Model
+
+__all__ = ["ModelConfig", "build_model", "Model"]

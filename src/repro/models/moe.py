@@ -1,0 +1,137 @@
+"""Mixture-of-Experts layer: top-k token-choice routing with capacity.
+
+GShard/Switch-style dense dispatch expressed as one-hot einsums so that XLA
+SPMD shards tokens over the (`pod`,`data`) axes and experts over `model`,
+emitting all-to-all/all-gather collectives as needed. Tokens are processed in
+groups (one group per sequence) to bound the dispatch-tensor working set.
+
+Covers qwen3-moe-235b-a22b (128e top-8) and llama4-maverick-400b-a17b
+(128e top-1 + shared expert, alternating dense/MoE layers).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name as _checkpoint_name
+
+from repro.models.common import ModelConfig, dense_init, mlp, mlp_init
+
+
+def moe_init(key, cfg: ModelConfig):
+    k_r, k_g, k_u, k_d, k_s = jax.random.split(key, 5)
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_ff
+    p = {
+        "router": dense_init(k_r, (D, E), jnp.float32),  # router kept fp32
+        "wg": dense_init(k_g, (E, D, F), cfg.dtype),
+        "wu": dense_init(k_u, (E, D, F), cfg.dtype),
+        "wd": dense_init(k_d, (E, F, D), cfg.dtype),
+    }
+    if cfg.shared_expert:
+        p["shared"] = mlp_init(k_s, cfg)
+    return p
+
+
+def _capacity(tokens_per_group: int, cfg: ModelConfig) -> int:
+    cap = int(tokens_per_group * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    # round to an MXU-friendly multiple of 8, min 8
+    cap = max(8, (cap + 7) // 8 * 8)
+    return min(cap, tokens_per_group)
+
+
+def route(params, cfg: ModelConfig, x: jnp.ndarray):
+    """x: (G, T, D) grouped tokens -> (weights (G,T,k), ids (G,T,k), aux)."""
+    logits = jnp.einsum("gtd,de->gte", x.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(probs, cfg.top_k)  # (G,T,k)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance auxiliary loss (Switch) + router z-loss
+    me = jnp.mean(probs, axis=(0, 1))  # (E,)
+    ce = jnp.mean(
+        jax.nn.one_hot(ids[..., 0], cfg.n_experts, dtype=jnp.float32), axis=(0, 1)
+    )
+    lb_loss = cfg.n_experts * jnp.sum(me * ce)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    aux = {"lb_loss": lb_loss, "z_loss": z_loss}
+    return weights, ids, aux
+
+
+def moe_apply(params, cfg: ModelConfig, x: jnp.ndarray):
+    """x: (B, S, D) -> (B, S, D), aux losses.
+
+    Tokens are routed in groups of `cfg.moe_group` so the dispatch/combine
+    einsums (which contract over the group axis) stay a small fraction of
+    expert FLOPs: dispatch cost = tokens * group * k * cf * D, i.e. linear in
+    the group size. Group size is therefore a §Perf lever.
+    """
+    B, S, D = x.shape
+    Tg = min(cfg.moe_group, S)
+    assert S % Tg == 0, (S, Tg)
+    G = B * (S // Tg)
+    xg = x.reshape(G, Tg, D)
+    E, k = cfg.n_experts, cfg.top_k
+    cap = _capacity(Tg, cfg)
+
+    weights, ids, aux = route(params, cfg, xg)  # (G,Tg,k)
+
+    # Position of each (token, k) routing decision inside its expert's buffer.
+    onehot = jax.nn.one_hot(ids, E, dtype=jnp.int32)  # (G,Tg,k,E)
+    flat = onehot.reshape(G, Tg * k, E)
+    pos = jnp.cumsum(flat, axis=1) - 1  # (G,Tg*k,E)
+    pos = (pos * flat).sum(-1).reshape(G, Tg, k)  # (G,Tg,k)
+    keep = (pos < cap) & (weights > 0)
+
+    oh_e = jax.nn.one_hot(ids, E, dtype=x.dtype) * keep[..., None].astype(x.dtype)
+    oh_c = jax.nn.one_hot(pos, cap, dtype=x.dtype)  # (G,Tg,k,cap)
+    dispatch = jnp.einsum("gske,gskc->gsec", oh_e, oh_c)  # (G,Tg,E,cap)
+    expert_in = jnp.einsum("gsec,gsd->gecd", dispatch, xg)  # (G,E,cap,D)
+
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in, params["wg"]))
+    h = h * jnp.einsum("gecd,edf->gecf", expert_in, params["wu"])
+    expert_out = jnp.einsum("gecf,efd->gecd", h, params["wd"])  # (G,E,cap,D)
+
+    combine = jnp.einsum("gske,gskc,gsk->gsec", oh_e, oh_c, weights.astype(x.dtype))
+    y = jnp.einsum("gsec,gecd->gsd", combine, expert_out)
+
+    if cfg.shared_expert:
+        y = y + mlp(params["shared"], xg)
+
+    frac_dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    aux = dict(aux, frac_dropped=frac_dropped)
+    return y.reshape(B, S, D), aux
+
+
+def moe_block_init(key, cfg: ModelConfig):
+    from repro.models.common import attention_init, rmsnorm_init
+
+    k_a, k_m = jax.random.split(key)
+    return {
+        "attn_norm": rmsnorm_init(cfg.d_model, cfg.dtype),
+        "attn": attention_init(k_a, cfg),
+        "moe_norm": rmsnorm_init(cfg.d_model, cfg.dtype),
+        "moe": moe_init(k_m, cfg),
+    }
+
+
+def moe_block_apply(params, cfg: ModelConfig, x, positions, window: int = -1):
+    from repro.models.common import attention, rmsnorm
+
+    a = attention(
+        params["attn"], cfg, rmsnorm(params["attn_norm"], x, cfg.norm_eps), positions, window
+    )
+    x = x + _checkpoint_name(a, "attn_out")
+    y, aux = moe_apply(params["moe"], cfg, rmsnorm(params["moe_norm"], x, cfg.norm_eps))
+    return x + _checkpoint_name(y, "moe_out"), aux
+
+
+def moe_block_decode(params, cfg: ModelConfig, x, cache, window: int = -1):
+    from repro.models.common import attention_decode, rmsnorm
+
+    a, cache = attention_decode(
+        params["attn"], cfg, rmsnorm(params["attn_norm"], x, cfg.norm_eps), cache, window
+    )
+    x = x + a
+    y, _ = moe_apply(params["moe"], cfg, rmsnorm(params["moe_norm"], x, cfg.norm_eps))
+    return x + y, cache

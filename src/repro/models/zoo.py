@@ -1,0 +1,67 @@
+"""Model handle: binds a ModelConfig to init/loss/decode callables."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    def init(self, key) -> Dict[str, Any]:
+        return transformer.model_init(key, self.cfg)
+
+    def init_shapes(self, key=None) -> Dict[str, Any]:
+        """Abstract params (ShapeDtypeStruct) — used by the dry-run."""
+        key = key if key is not None else jax.random.key(0)
+        return jax.eval_shape(lambda k: transformer.model_init(k, self.cfg), key)
+
+    def forward(self, params, batch, window: int = -1):
+        return transformer.forward(params, self.cfg, batch, window)
+
+    def loss(self, params, batch, window: int = -1):
+        return transformer.loss_fn(params, self.cfg, batch, window)
+
+    def init_cache(self, batch: int, max_seq: int, dtype=None):
+        return transformer.init_cache(self.cfg, batch, max_seq, dtype)
+
+    def decode_step(self, params, tokens, cache, window: int = -1):
+        return transformer.decode_step(params, self.cfg, tokens, cache, window)
+
+    def param_count(self) -> int:
+        shapes = self.init_shapes()
+        total = 0
+        for s in jax.tree.leaves(shapes):
+            n = 1
+            for d in s.shape:
+                n *= int(d)
+            total += n
+        return total
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only top_k of n_experts count)."""
+        if not self.cfg.is_moe_arch:
+            return self.param_count()
+        shapes = self.init_shapes()
+        total = 0
+        flat = jax.tree.leaves_with_path(shapes)
+        for path, leaf in flat:
+            n = 1
+            for d in leaf.shape:
+                n *= int(d)
+            keystr = jax.tree_util.keystr(path)
+            if any(w in keystr for w in ("'wg'", "'wu'", "'wd'")) and "moe" in keystr:
+                n = n * self.cfg.top_k // self.cfg.n_experts
+            total += n
+        return total
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg=cfg)

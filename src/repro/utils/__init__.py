@@ -1,0 +1,24 @@
+"""Shared utilities: pytree math, RNG helpers, shape utilities."""
+from repro.utils.tree import (
+    tree_add,
+    tree_sub,
+    tree_scale,
+    tree_dot,
+    tree_norm,
+    tree_zeros_like,
+    tree_size,
+    tree_bytes,
+    tree_cast,
+)
+
+__all__ = [
+    "tree_add",
+    "tree_sub",
+    "tree_scale",
+    "tree_dot",
+    "tree_norm",
+    "tree_zeros_like",
+    "tree_size",
+    "tree_bytes",
+    "tree_cast",
+]

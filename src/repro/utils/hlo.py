@@ -1,0 +1,173 @@
+"""HLO analysis: collective-bytes parsing + 3-term roofline (TPU v5e).
+
+cost_analysis() gives per-device FLOPs and bytes accessed, but not
+collective traffic — that is recovered by parsing the post-SPMD optimized
+HLO text and summing result-shape bytes of every collective op (shapes in
+the partitioned module are already per-device):
+
+  compute   = flops / PEAK_FLOPS
+  memory    = bytes_accessed / HBM_BW
+  collective= Σ bytes(op) · mult(op) / ICI_BW      (per device)
+
+mult: all-reduce counts twice (reduce + broadcast phases of a ring);
+all-gather / reduce-scatter / all-to-all / collective-permute once.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12  # bf16 FLOP/s
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+# one shape token: dtype[1,2,3]  (layout braces optional)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# an HLO instruction line: %name = <shape-or-tuple> opcode(
+_INSTR_RE = re.compile(
+    r"=\s*(\([^)]*\)|[\w\[\],{}\s/#:*]+?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def top_collectives(hlo_text: str, k: int = 15):
+    """(bytes, op, shape-text) for the k largest collective instructions —
+    the §Perf loop's 'profile': which tensors dominate ICI traffic."""
+    items = []
+    for m in _INSTR_RE.finditer(hlo_text):
+        shape_text, op = m.group(1), m.group(2)
+        b = _shape_bytes(shape_text)
+        if b:
+            items.append((b, op, shape_text.strip()[:80]))
+    items.sort(reverse=True)
+    # aggregate identical (op, shape) pairs with counts
+    agg: Dict = {}
+    for b, op, sh in items:
+        key = (op, sh)
+        if key in agg:
+            agg[key][0] += 1
+        else:
+            agg[key] = [1, b]
+    rows = [
+        (cnt * b, cnt, b, op, sh) for (op, sh), (cnt, b) in agg.items()
+    ]
+    rows.sort(reverse=True)
+    return rows[:k]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device collective bytes by op type (weighted sum in 'total')."""
+    out = {k: 0.0 for k in _COLLECTIVES}
+    seen_done = set()
+    for m in _INSTR_RE.finditer(hlo_text):
+        shape_text, op = m.group(1), m.group(2)
+        # avoid double counting async pairs: -done lines repeat the shape
+        span_line = hlo_text[max(0, m.start() - 120) : m.end()]
+        if f"{op}-done" in span_line:
+            continue
+        out[op] += _shape_bytes(shape_text)
+    out["total_weighted"] = sum(out[k] * _COLLECTIVES[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float  # per device
+    bytes_accessed: float  # per device
+    coll_bytes: float  # per device, weighted
+    coll_by_op: Dict[str, float]
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops_per_device": self.flops,
+            "bytes_per_device": self.bytes_accessed,
+            "coll_bytes_per_device": self.coll_bytes,
+            "coll_by_op": self.coll_by_op,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+        }
+
+
+def analyze(compiled) -> Roofline:
+    """Roofline terms from a compiled SPMD executable."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", cost.get("bytes_accessed", 0.0)))
+    text = compiled.as_text()
+    coll = collective_bytes(text)
+    return Roofline(
+        flops=flops,
+        bytes_accessed=byts,
+        coll_bytes=coll["total_weighted"],
+        coll_by_op={k: v for k, v in coll.items() if k != "total_weighted"},
+    )
+
+
+def memory_summary(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    out = {}
+    for field in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        if hasattr(ma, field):
+            out[field] = float(getattr(ma, field))
+    return out

@@ -1,0 +1,5 @@
+import os
+import sys
+
+# keep smoke tests on 1 device — ONLY the dry-run forces 512 placeholders
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

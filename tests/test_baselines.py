@@ -1,0 +1,54 @@
+"""Clustered-FL baselines execute and report the expected cost structure."""
+import numpy as np
+import pytest
+
+from repro.data import make_population
+from repro.fl import FLConfig
+from repro.fl.baselines import CFL, FLHC, IFCA, FlexCFL
+from repro.fl.task import MLPTask
+
+
+@pytest.fixture(scope="module")
+def pop():
+    return make_population(
+        n_clients=120, n_groups=2, group_sep=0.0, label_conflict=0.6, seed=5
+    )
+
+
+@pytest.fixture(scope="module")
+def fl():
+    return FLConfig(rounds=12, participants_per_round=40, eval_every=4, seed=5)
+
+
+def test_ifca_runs_and_pays_broadcast_cost(pop, fl):
+    task = MLPTask(dim=pop.dim, n_classes=pop.n_classes)
+    hist = IFCA(task, pop, fl, k=2).run()
+    assert np.isfinite(hist[-1]["acc_mean"])
+    # k models broadcast every round: comm = k × participants × rounds
+    assert hist[-1]["comm"] == pytest.approx(2 * 40 * 12)
+
+
+def test_flhc_full_pass_cost(pop, fl):
+    task = MLPTask(dim=pop.dim, n_classes=pop.n_classes)
+    algo = FLHC(task, pop, fl, k=2, warmup_rounds=4)
+    hist = algo.run()
+    assert np.isfinite(hist[-1]["acc_mean"])
+    # resource includes the one-shot FULL population pass
+    per_round = fl.participants_per_round * fl.local_steps * fl.batch_size
+    full_pass = pop.n_clients * fl.local_steps * fl.batch_size
+    assert hist[-1]["resource"] >= fl.rounds * per_round * 0.8 + full_pass
+
+
+def test_flexcfl_runs(pop, fl):
+    task = MLPTask(dim=pop.dim, n_classes=pop.n_classes)
+    hist = FlexCFL(task, pop, fl, k=2).run()
+    assert np.isfinite(hist[-1]["acc_mean"])
+
+
+def test_cfl_small_scale(pop):
+    task = MLPTask(dim=pop.dim, n_classes=pop.n_classes)
+    fl = FLConfig(rounds=6, participants_per_round=40, eval_every=2, seed=5)
+    hist = CFL(task, pop, fl, k=2).run()
+    assert np.isfinite(hist[-1]["acc_mean"])
+    # full participation: resource per round is the whole population
+    assert hist[-1]["resource"] >= pop.n_clients * fl.local_steps * fl.batch_size * 5

@@ -1,0 +1,27 @@
+"""npz pytree checkpoint roundtrip."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import load_pytree, save_pytree
+from repro.configs import get_config, reduce_config
+from repro.models import build_model
+
+
+def test_roundtrip(tmp_path):
+    cfg = reduce_config(get_config("granite_3_2b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    save_pytree(tmp_path / "p.npz", params)
+    restored = load_pytree(tmp_path / "p.npz", jax.tree.map(jnp.zeros_like, params))
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_shape_mismatch_raises(tmp_path):
+    import pytest
+
+    t = {"a": jnp.ones((2, 3))}
+    save_pytree(tmp_path / "t.npz", t)
+    with pytest.raises(ValueError):
+        load_pytree(tmp_path / "t.npz", {"a": jnp.ones((3, 2))})

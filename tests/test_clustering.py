@@ -1,0 +1,111 @@
+"""Auxo clustering unit + property tests."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.clustering import (
+    ClusterState,
+    OnlineClustering,
+    assign_and_update,
+    kmeans_cosine,
+    population_heterogeneity,
+)
+
+
+def _two_group_sketches(rng, n=64, d=16, noise=0.1, dirs=None):
+    if dirs is None:
+        dirs = (rng.normal(size=d), rng.normal(size=d))
+    a, b = dirs
+    x = np.stack([(a if i % 2 == 0 else b) + noise * rng.normal(size=d) for i in range(n)])
+    labels = np.array([i % 2 for i in range(n)])
+    return x.astype(np.float32), labels
+
+
+def test_kmeans_recovers_two_groups():
+    rng = np.random.default_rng(0)
+    x, labels = _two_group_sketches(rng)
+    cents, assign = kmeans_cosine(jax.random.key(0), jnp.asarray(x), 2)
+    assign = np.asarray(assign)
+    agree = max(np.mean(assign == labels), np.mean(assign == 1 - labels))
+    assert agree > 0.95
+
+
+def test_kmeans_mask_ignores_padding():
+    rng = np.random.default_rng(1)
+    x, labels = _two_group_sketches(rng, n=48)
+    pad = rng.normal(size=(16, x.shape[1])).astype(np.float32) * 50  # junk rows
+    xp = np.concatenate([x, pad])
+    mask = np.concatenate([np.ones(48), np.zeros(16)]).astype(np.float32)
+    cents, assign = kmeans_cosine(jax.random.key(0), jnp.asarray(xp), 2, mask=jnp.asarray(mask))
+    assign = np.asarray(assign)[:48]
+    agree = max(np.mean(assign == labels), np.mean(assign == 1 - labels))
+    assert agree > 0.9
+
+
+def test_assign_and_update_margin_rises_on_separable_data():
+    rng = np.random.default_rng(2)
+    dirs = (rng.normal(size=16), rng.normal(size=16))  # stable group directions
+    st8 = ClusterState.create(2, 16)
+    x, _ = _two_group_sketches(rng, n=64, dirs=dirs)
+    cents, _ = kmeans_cosine(jax.random.key(0), jnp.asarray(x), 2)
+    st8 = dataclasses.replace(st8, centroids=cents, initialized=jnp.ones((), bool))
+    for r in range(10):
+        x, _ = _two_group_sketches(rng, n=64, dirs=dirs)
+        st8, assign, sims = assign_and_update(st8, jnp.asarray(x))
+    assert float(st8.margin) > 0.5
+    assert float(st8.dispersion) < 0.5
+
+
+def test_assign_and_update_counts_accumulate():
+    rng = np.random.default_rng(3)
+    oc = OnlineClustering(2, 16)
+    for _ in range(5):
+        x, _ = _two_group_sketches(rng, n=32)
+        oc.step(jnp.asarray(x))
+    assert float(np.asarray(oc.state.counts).sum()) == pytest.approx(4 * 32)  # 1st round = kmeans
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(4, 40), d=st.integers(2, 32), seed=st.integers(0, 10_000))
+def test_heterogeneity_properties(n, d, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    j = float(population_heterogeneity(jnp.asarray(x)))
+    assert j >= 0
+    # translation invariant
+    j2 = float(population_heterogeneity(jnp.asarray(x + 7.0)))
+    assert j == pytest.approx(j2, rel=1e-3, abs=1e-3)
+    # identical rows -> zero heterogeneity
+    j0 = float(population_heterogeneity(jnp.asarray(np.repeat(x[:1], n, 0))))
+    assert j0 == pytest.approx(0.0, abs=1e-5)
+    # masking out all but one row -> ~0
+    mask = np.zeros(n, np.float32)
+    mask[0] = 1
+    jm = float(population_heterogeneity(jnp.asarray(x), jnp.asarray(mask)))
+    assert jm == pytest.approx(0.0, abs=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(6, 30), d=st.integers(4, 16), k=st.integers(2, 4), seed=st.integers(0, 9999))
+def test_assign_update_mask_equivalence(n, d, k, seed):
+    """Padding with mask==0 must not change the state update."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    state = ClusterState.create(k, d)
+    cents = rng.normal(size=(k, d)).astype(np.float32)
+    cents /= np.linalg.norm(cents, axis=1, keepdims=True)
+    state = dataclasses.replace(
+        state, centroids=jnp.asarray(cents), initialized=jnp.ones((), bool)
+    )
+    s1, a1, _ = assign_and_update(state, jnp.asarray(x), jnp.ones(n))
+    pad = rng.normal(size=(5, d)).astype(np.float32) * 10
+    xp = np.concatenate([x, pad])
+    mp = np.concatenate([np.ones(n), np.zeros(5)]).astype(np.float32)
+    s2, a2, _ = assign_and_update(state, jnp.asarray(xp), jnp.asarray(mp))
+    np.testing.assert_allclose(np.asarray(s1.centroids), np.asarray(s2.centroids), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(s1.dispersion), float(s2.dispersion), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2)[:n])

@@ -1,0 +1,114 @@
+"""Coordinator: matching, partition, anomaly blacklist, fault tolerance."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.coordinator import CohortCoordinator
+from repro.core.criteria import PartitionCriteria
+
+
+def _coordinator(**kw):
+    defaults = dict(
+        d_sketch=16,
+        cluster_k=2,
+        criteria=PartitionCriteria(
+            k=2, min_members=8, start_frac=0.0, margin_threshold=0.3, het_reduction_slack=3.0
+        ),
+        clustering_start_frac=0.0,
+    )
+    defaults.update(kw)
+    return CohortCoordinator(**defaults)
+
+
+def _two_group(rng, n=60, d=16, noise=0.1):
+    a = rng.normal(size=d)
+    b = rng.normal(size=d)
+    x = np.stack([(a if i % 2 == 0 else b) + noise * rng.normal(size=d) for i in range(n)])
+    return x.astype(np.float32)
+
+
+def test_partition_on_separable_population():
+    rng = np.random.default_rng(0)
+    co = _coordinator()
+    event = None
+    for r in range(30):
+        sk = _two_group(rng)
+        msgs, ev = co.feedback("0", list(range(60)), jnp.asarray(sk), r, 30)
+        if ev:
+            event = ev
+            break
+    assert event is not None and event.children == ["0.0", "0.1"]
+    assert co.tree.leaves() == ["0.0", "0.1"]
+    # cluster purity of the messages at partition time
+    L = [msgs[i].cluster_index for i in range(60)]
+    same = [L[i] == L[0] for i in range(0, 60, 2)]
+    assert np.mean(same) > 0.9
+
+
+def test_no_partition_on_homogeneous_population():
+    rng = np.random.default_rng(1)
+    co = _coordinator()
+    base = rng.normal(size=16)
+    for r in range(30):
+        sk = (base + 0.05 * rng.normal(size=(60, 16))).astype(np.float32)
+        _, ev = co.feedback("0", list(range(60)), jnp.asarray(sk), r, 30)
+        assert ev is None, "homogeneous population must not partition"
+
+
+def test_match_request_resolves_stale_and_fingerprint():
+    rng = np.random.default_rng(2)
+    co = _coordinator()
+    for r in range(30):
+        sk = _two_group(rng)
+        msgs, ev = co.feedback("0", list(range(60)), jnp.asarray(sk), r, 30)
+        if ev:
+            break
+    # stale request for the partitioned parent resolves via L
+    leaf = co.match_request(7, "0", cluster_index=1)
+    assert leaf in ("0.0", "0.1")
+    # fingerprint-based flat matching: group-A fingerprint lands with its group
+    sk = _two_group(rng)
+    fa = co.match_request(100, "0", fingerprint=sk[0] - sk.mean(0))
+    fb = co.match_request(101, "0", fingerprint=sk[1] - sk.mean(0))
+    assert {fa, fb} == {"0.0", "0.1"}
+    # unknown cohort id falls back to root resolution
+    assert co.match_request(5, "9.9.9", -1) in ("0.0", "0.1")
+
+
+def test_anomaly_blacklist():
+    rng = np.random.default_rng(3)
+    co = _coordinator(anomaly_threshold=-0.2, anomaly_strikes=2)
+    for r in range(4):
+        sk = _two_group(rng, n=40, noise=0.05)
+        sk[0] = 80.0 * rng.normal(size=16)  # client 0 is a wild outlier
+        claimed = [True] + [False] * 39
+        co.feedback("0", list(range(40)), jnp.asarray(sk), r, 20, claimed_preferred=claimed)
+    assert 0 in co.blacklist
+    assert co.match_request(0, "0") is None  # blacklisted clients are ignored
+
+
+def test_checkpoint_recover_roundtrip(tmp_path):
+    rng = np.random.default_rng(4)
+    co = _coordinator()
+    for r in range(30):
+        sk = _two_group(rng)
+        _, ev = co.feedback("0", list(range(60)), jnp.asarray(sk), r, 30)
+        if ev:
+            break
+    co.blacklist.add(42)
+    path = tmp_path / "coord.ckpt"
+    co.checkpoint(path)
+    co2 = CohortCoordinator.recover(path)
+    assert set(co2.tree.leaves()) == set(co.tree.leaves())
+    assert 42 in co2.blacklist
+
+
+def test_soft_state_rebuild_from_requests():
+    co = _coordinator()
+    co.rebuild_from_requests([(1, "0.0", 0), (2, "0.1", 1), (3, "0.1.0", 0)])
+    assert "0.0" in co.tree and "0.1.0" in co.tree
+    assert set(co.tree.leaves()) == {"0.0", "0.1.0", "0.1.1"} or set(co.tree.leaves()) == {
+        "0.0",
+        "0.1.0",
+    }

@@ -1,0 +1,56 @@
+"""Federated data pipeline tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import AvailabilityTrace, DeviceSpeeds, make_population
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n_clients=st.integers(20, 200),
+    n_groups=st.integers(1, 6),
+    seed=st.integers(0, 999),
+)
+def test_population_structure(n_clients, n_groups, seed):
+    pop = make_population(n_clients=n_clients, n_groups=n_groups, seed=seed, test_per_group=50)
+    assert pop.n_clients == n_clients
+    groups = pop.client_groups()
+    assert set(groups) == set(range(n_groups))
+    for c in pop.clients:
+        assert len(c.x) == len(c.y) >= 8
+        assert c.x.dtype == np.float32
+    x, y = pop.sample_batch(0, batch=4, steps=3, rng=np.random.default_rng(0))
+    assert x.shape == (3, 4, pop.dim) and y.shape == (3, 4)
+
+
+def test_label_conflict_creates_irreducible_disagreement():
+    pop = make_population(
+        n_clients=40, n_groups=4, group_sep=0.0, label_conflict=0.6, seed=0
+    )
+    # same feature space, different label maps: per-group test labels differ
+    # in distribution even though features are iid across groups
+    ys = [pop.test_y[g] for g in range(4)]
+    dists = [np.bincount(y, minlength=pop.n_classes) / len(y) for y in ys]
+    tv01 = 0.5 * np.abs(dists[0] - dists[1]).sum()
+    assert tv01 > 0.05
+
+
+def test_availability_trace_low_rate():
+    tr = AvailabilityTrace(n_clients=2000, base_rate=0.05, seed=0)
+    rng = np.random.default_rng(0)
+    counts = [len(tr.available(r, rng)) for r in range(100)]
+    rate = np.mean(counts) / 2000
+    assert 0.02 < rate < 0.09  # ~5% availability like the FedScale traces
+
+
+def test_overcommit_drops_slowest():
+    sp = DeviceSpeeds(n_clients=100, sigma=1.0, seed=0)
+    participants = list(range(100))
+    kept, duration = sp.round_duration(participants, [10] * 100, overcommit=1.25)
+    assert len(kept) == 80  # 1/1.25
+    # duration equals the slowest KEPT participant, faster than global max
+    all_lat = np.array([sp.speed[c] * 10 for c in participants])
+    assert duration < all_lat.max()
+    kept_lat = np.array([sp.speed[c] * 10 for c in kept])
+    assert duration == pytest.approx(kept_lat.max())

@@ -1,0 +1,92 @@
+"""Mini dry-run: the full dryrun plumbing (mesh, shardings, lower, compile,
+roofline extraction) on a 16-placeholder-device mesh with reduced configs.
+
+Runs in a SUBPROCESS so the forced device count never pollutes the other
+tests (they must see 1 CPU device).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+    import json
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config, reduce_config
+    from repro.configs.shapes import InputShape
+    from repro.launch import sharding as shd
+    from repro.launch.steps import (StepConfig, clustering_init, yogi_init,
+                                    make_train_step, make_serve_step)
+    from repro.models import build_model
+    from repro.utils import hlo as hlo_util
+
+    mesh = jax.make_mesh((4, 4), ("data", "model"))
+    out = {}
+    for arch in ["granite_3_2b", "qwen3_moe_235b_a22b", "zamba2_7b"]:
+        cfg = reduce_config(get_config(arch)).replace(
+            dtype=jnp.bfloat16, d_model=256, n_heads=8, n_kv_heads=4,
+            attn_qchunk=8, ce_chunk=8)
+        if cfg.family == "hybrid":
+            cfg = cfg.replace(ssm_heads=8)
+        model = build_model(cfg)
+        sc = StepConfig(d_sketch=32)
+        pshapes = model.init_shapes()
+        pshard = shd.param_shardings(pshapes, mesh, "tp")
+        batch = {"tokens": jax.ShapeDtypeStruct((8, 4, 32), jnp.int32)}
+        bshard = shd.batch_shardings(batch, mesh)
+        clust = jax.eval_shape(lambda: clustering_init(2, 32))
+        opt = jax.eval_shape(lambda: yogi_init(pshapes))
+        oshard = {k: shd.param_shardings(v, mesh, "fsdp") for k, v in opt.items()}
+        cshard = jax.tree.map(lambda _: shd.replicated(mesh), clust)
+        fn = make_train_step(model, sc)
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=(pshard, oshard, cshard, bshard),
+                              out_shardings=(pshard, oshard, cshard, None)).lower(
+                pshapes, opt, clust, batch)
+        compiled = lowered.compile()
+        roof = hlo_util.analyze(compiled)
+        mem = hlo_util.memory_summary(compiled)
+        out[arch] = {"flops": roof.flops, "coll": roof.coll_bytes,
+                     "temp": mem.get("temp_size_in_bytes", 0)}
+        # serve step lowers too
+        cache = jax.eval_shape(lambda: model.init_cache(8, 64, jnp.bfloat16))
+        cache_shard = shd.cache_shardings(cache, 8, mesh)
+        tok = {"tokens": jax.ShapeDtypeStruct((8, 1), jnp.int32)}
+        with mesh:
+            c2 = jax.jit(make_serve_step(model, sc),
+                         in_shardings=(pshard, cache_shard, shd.batch_shardings(tok, mesh)),
+                         out_shardings=(None, cache_shard)).lower(
+                pshapes, cache, tok).compile()
+        out[arch]["serve_ok"] = True
+    print("RESULT " + json.dumps(out))
+    """
+)
+
+
+@pytest.mark.slow
+def test_mini_dryrun_lowers_and_compiles():
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT],
+        capture_output=True,
+        text=True,
+        timeout=900,
+        env=env,
+        cwd=root,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    out = json.loads(line[len("RESULT "):])
+    for arch, rep in out.items():
+        assert rep["flops"] > 0, arch
+        assert rep["coll"] > 0, arch  # sharded step must communicate
+        assert rep["serve_ok"], arch

@@ -1,0 +1,97 @@
+"""End-to-end FL engine tests: Auxo lifecycle on a synthetic population."""
+import numpy as np
+import pytest
+
+from repro.data import make_population
+from repro.fl import AuxoConfig, FLConfig, run_auxo, run_fl
+from repro.fl.task import MLPTask
+
+
+@pytest.fixture(scope="module")
+def conflict_pop():
+    return make_population(
+        n_clients=400, n_groups=2, group_sep=0.0, dirichlet=3.0, label_conflict=1.0, seed=3
+    )
+
+
+def _fl(rounds=40, **kw):
+    base = dict(
+        rounds=rounds,
+        participants_per_round=60,
+        eval_every=rounds - 1,
+        use_availability=False,
+        seed=3,
+    )
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _auxo(**kw):
+    base = dict(
+        d_sketch=64,
+        cluster_k=2,
+        max_cohorts=2,
+        clustering_start_frac=0.05,
+        partition_start_frac=0.1,
+        partition_end_frac=0.8,
+        min_members=8,
+        margin_threshold=0.4,
+    )
+    base.update(kw)
+    return AuxoConfig(**base)
+
+
+def test_auxo_beats_single_model_on_conflicting_groups(conflict_pop):
+    task = MLPTask(dim=conflict_pop.dim, n_classes=conflict_pop.n_classes)
+    base = run_fl(task, conflict_pop, _fl())
+    eng, hist = run_auxo(task, conflict_pop, _fl(), _auxo())
+    assert hist[-1]["n_cohorts"] == 2, "should discover the 2 latent groups"
+    assert hist[-1]["acc_mean"] > base[-1]["acc_mean"] + 0.03
+    # cohort purity: most clients of a latent group share a cohort
+    groups = conflict_pop.client_groups()
+    assign = np.array([eng.client_cohort(c) for c in range(conflict_pop.n_clients)])
+    purity = []
+    for leaf in set(assign):
+        g = groups[assign == leaf]
+        purity.append(np.bincount(g).max() / len(g))
+    assert np.mean(purity) > 0.8
+
+
+def test_auxo_under_availability_and_overcommit(conflict_pop):
+    task = MLPTask(dim=conflict_pop.dim, n_classes=conflict_pop.n_classes)
+    eng, hist = run_auxo(
+        task, conflict_pop, _fl(rounds=30, use_availability=True), _auxo()
+    )
+    assert np.isfinite(hist[-1]["acc_mean"])
+    assert hist[-1]["resource"] > 0 and hist[-1]["time"] > 0
+
+
+def test_resilience_knobs_run(conflict_pop):
+    """DP noise, corrupted clients, affinity loss — all paths execute."""
+    task = MLPTask(dim=conflict_pop.dim, n_classes=conflict_pop.n_classes)
+    fl = _fl(rounds=12, dp_clip=1.0, dp_sigma=0.3, corrupt_frac=0.1, affinity_loss_rate=0.1)
+    eng, hist = run_auxo(task, conflict_pop, fl, _auxo())
+    assert np.isfinite(hist[-1]["acc_mean"])
+
+
+def test_qfedavg_and_fedprox_paths(conflict_pop):
+    task = MLPTask(dim=conflict_pop.dim, n_classes=conflict_pop.n_classes)
+    for kw in (dict(qfed_q=1.0, algorithm="qfedavg"), dict(prox_mu=0.1, algorithm="fedprox")):
+        hist = run_fl(task, conflict_pop, _fl(rounds=10, **kw))
+        assert np.isfinite(hist[-1]["acc_mean"])
+
+
+def test_partition_warm_start_preserves_model(conflict_pop):
+    """Children inherit parent weights: accuracy must not crater at split."""
+    task = MLPTask(dim=conflict_pop.dim, n_classes=conflict_pop.n_classes)
+    eng, hist = run_auxo(task, conflict_pop, _fl(rounds=40, eval_every=2), _auxo())
+    accs = [h["acc_mean"] for h in hist]
+    drops = [accs[i] - accs[i + 1] for i in range(len(accs) - 1)]
+    assert max(drops, default=0.0) < 0.25
+
+
+def test_ftfa_personalization(conflict_pop):
+    task = MLPTask(dim=conflict_pop.dim, n_classes=conflict_pop.n_classes)
+    eng, hist = run_auxo(task, conflict_pop, _fl(rounds=25), _auxo())
+    acc = eng.ftfa_eval(steps=5)
+    assert np.isfinite(acc) and acc > 0.2

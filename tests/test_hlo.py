@@ -1,0 +1,46 @@
+"""HLO collective-bytes parser unit tests."""
+from repro.utils.hlo import PEAK_FLOPS, Roofline, collective_bytes
+
+
+SAMPLE = """
+HloModule jit_train_step
+ENTRY %main {
+  %p0 = bf16[1024,2048]{1,0} parameter(0)
+  %ar = bf16[1024,2048]{1,0} all-reduce(%p0), replica_groups={}
+  %ag = f32[64,512]{1,0} all-gather(%p0), dimensions={0}
+  %a2a = bf16[8,128]{1,0} all-to-all(%ar), dimensions={0}
+  %cp = f32[16,16]{1,0} collective-permute(%ag), source_target_pairs={{0,1}}
+  %rs = f32[32,32]{1,0} reduce-scatter(%ag), dimensions={0}
+  ROOT %t = tuple(%ar)
+}
+"""
+
+
+def test_collective_bytes_by_op():
+    out = collective_bytes(SAMPLE)
+    assert out["all-reduce"] == 1024 * 2048 * 2
+    assert out["all-gather"] == 64 * 512 * 4
+    assert out["all-to-all"] == 8 * 128 * 2
+    assert out["collective-permute"] == 16 * 16 * 4
+    assert out["reduce-scatter"] == 32 * 32 * 4
+    # all-reduce weighted 2x in the total
+    expected = (
+        2 * 1024 * 2048 * 2 + 64 * 512 * 4 + 8 * 128 * 2 + 16 * 16 * 4 + 32 * 32 * 4
+    )
+    assert out["total_weighted"] == expected
+
+
+def test_roofline_terms_and_bottleneck():
+    r = Roofline(flops=PEAK_FLOPS, bytes_accessed=0.0, coll_bytes=0.0, coll_by_op={})
+    assert r.compute_s == 1.0
+    assert r.bottleneck == "compute"
+    r2 = Roofline(flops=0.0, bytes_accessed=819e9 * 2, coll_bytes=0.0, coll_by_op={})
+    assert r2.memory_s == 2.0 and r2.bottleneck == "memory"
+    r3 = Roofline(flops=0.0, bytes_accessed=0.0, coll_bytes=50e9 * 3, coll_by_op={})
+    assert r3.collective_s == 3.0 and r3.bottleneck == "collective"
+
+
+def test_tuple_shapes_parsed():
+    text = "%x = (bf16[4,4]{1,0}, f32[2,2]{1,0}) all-gather(%a, %b), dims={0}"
+    out = collective_bytes(text)
+    assert out["all-gather"] == 4 * 4 * 2 + 2 * 2 * 4

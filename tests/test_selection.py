@@ -1,0 +1,79 @@
+"""Cohort selection, rewards, tree-distance properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.cohort import AffinityMessage, ClientAffinity, CohortTree, tree_distance
+from repro.core.selection import CohortSelector, instant_reward, update_rewards
+
+
+def test_tree_distance_paper_examples():
+    # Figure 7 of the paper
+    assert tree_distance("0.0.1", "0.0.0") == 2
+    assert tree_distance("0.0.1", "0.1") == 3
+    assert tree_distance("0", "0") == 0
+    assert tree_distance("0", "0.1") == 1
+
+
+_cohort_ids = st.lists(st.integers(0, 2), min_size=0, max_size=4).map(
+    lambda parts: ".".join(["0"] + [str(p) for p in parts])
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(a=_cohort_ids, b=_cohort_ids, c=_cohort_ids)
+def test_tree_distance_is_a_metric(a, b, c):
+    assert tree_distance(a, b) == tree_distance(b, a)
+    assert (tree_distance(a, b) == 0) == (a == b)
+    assert tree_distance(a, c) <= tree_distance(a, b) + tree_distance(b, c)
+
+
+def test_instant_reward_flags_outliers():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(40, 8)).astype(np.float32) * 0.1
+    x[0] += 30.0  # one extreme outlier
+    delta, d = instant_reward(jnp.asarray(x))
+    delta = np.asarray(delta)
+    assert delta[0] < 0  # outlier detected (paper: negative ΔR = outlier)
+    assert np.mean(delta[1:] > 0) > 0.7
+
+
+def test_update_rewards_ema():
+    r = 0.0
+    for _ in range(50):
+        r = update_rewards(r, 1.0, gamma=0.2)
+    assert r == pytest.approx(1.0, abs=1e-3)
+
+
+def test_selector_decay_and_exploit():
+    sel = CohortSelector(epsilon0=0.8, decay=0.9, min_epsilon=0.05)
+    assert sel.epsilon(0) == pytest.approx(0.8)
+    assert sel.epsilon(1000) == pytest.approx(0.05)
+    rng = np.random.default_rng(0)
+    picks = [
+        sel.select(rng, {"0.0": 0.9, "0.1": -0.5}, ["0.0", "0.1"], round_idx=200)
+        for _ in range(200)
+    ]
+    # late rounds: overwhelmingly exploit the max-reward cohort
+    assert picks.count("0.0") > 170
+
+
+def test_explore_reward_propagation_prefers_distant_on_negative():
+    tree = CohortTree()
+    tree.partition("0", 2)
+    tree.partition("0.0", 2)
+    aff = ClientAffinity()
+    aff.update_from_feedback(AffinityMessage("0.0.1", -3.0, 0))
+    known = ["0.0.0", "0.1"]
+    aff.propagate_explore("0.0.1", -3.0, known)
+    # Fig. 7: distant cohort 0.1 ends with a (less negative) higher reward
+    assert aff.rewards["0.1"] > aff.rewards["0.0.0"]
+
+
+def test_affinity_wipe_resets_exploration():
+    aff = ClientAffinity()
+    aff.update_from_feedback(AffinityMessage("0.0", 0.5, 1))
+    aff.wipe()
+    assert aff.preferred() is None and not aff.cluster_index

@@ -1,0 +1,108 @@
+"""Distributed step functions executed numerically on a 1-device mesh."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.launch.steps import (
+    StepConfig,
+    clustering_init,
+    clustering_update,
+    make_central_train_step,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+    yogi_init,
+)
+from repro.models import build_model
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = reduce_config(get_config("granite_3_2b")).replace(attn_qchunk=8, ce_chunk=8)
+    return build_model(cfg)
+
+
+def _train_batch(key, cfg, C=4, m=4, S=16):
+    return {"tokens": jax.random.randint(key, (C, m, S), 0, cfg.vocab)}
+
+
+def test_federated_train_step_improves_loss(small_model):
+    sc = StepConfig(local_steps=2, client_lr=0.05, server_lr=0.05, d_sketch=32)
+    step = jax.jit(make_train_step(small_model, sc))
+    key = jax.random.key(0)
+    params = small_model.init(key)
+    opt = yogi_init(params)
+    clust = clustering_init(sc.cluster_k, sc.d_sketch)
+    batch = _train_batch(key, small_model.cfg)
+    losses = []
+    for i in range(16):
+        params, opt, clust, metrics = step(params, opt, clust, batch)
+        losses.append(float(metrics["loss"]))
+        assert np.isfinite(losses[-1])
+    assert losses[-1] < losses[0], losses
+    assert float(clust["initialized"]) == 1.0
+    assert float(jnp.sum(metrics["cluster_counts"])) == 4  # all clients assigned
+
+
+def test_central_train_step_runs(small_model):
+    sc = StepConfig(server_lr=0.2, d_sketch=32)
+    step = jax.jit(make_central_train_step(small_model, sc, n_clients=4))
+    key = jax.random.key(1)
+    params = small_model.init(key)
+    opt = yogi_init(params)
+    clust = clustering_init(sc.cluster_k, sc.d_sketch)
+    batch = {"tokens": jax.random.randint(key, (8, 16), 0, small_model.cfg.vocab)}
+    l0 = None
+    for i in range(6):
+        params, opt, clust, metrics = step(params, opt, clust, batch)
+        if l0 is None:
+            l0 = float(metrics["loss"])
+    assert float(metrics["loss"]) < l0
+
+
+def test_serve_and_prefill_steps(small_model):
+    sc = StepConfig()
+    prefill = jax.jit(make_prefill_step(small_model, sc))
+    serve = jax.jit(make_serve_step(small_model, sc))
+    key = jax.random.key(2)
+    params = small_model.init(key)
+    batch = {"tokens": jax.random.randint(key, (2, 16), 0, small_model.cfg.vocab)}
+    logits = prefill(params, batch)
+    # serving prefill returns LAST-position logits only (decode continues)
+    assert logits.shape == (2, 1, small_model.cfg.vocab)
+    cache = small_model.init_cache(2, 32)
+    lg, cache = serve(params, cache, {"tokens": batch["tokens"][:, :1]})
+    assert lg.shape == (2, 1, small_model.cfg.vocab)
+    assert not bool(jnp.any(jnp.isnan(lg)))
+
+
+def test_clustering_update_separates_groups():
+    rng = np.random.default_rng(0)
+    d = 32
+    a, b = rng.normal(size=d), rng.normal(size=d)
+    state = clustering_init(2, d)
+    for r in range(8):
+        sk = np.stack([(a if i % 2 == 0 else b) + 0.05 * rng.normal(size=d) for i in range(16)])
+        state, metrics = clustering_update(state, jnp.asarray(sk.astype(np.float32)))
+    assign = np.asarray(metrics["assign"])
+    agree = max(np.mean(assign == assign[0] * (np.arange(16) % 2 == 0)), 0)
+    # even indices together, odd together
+    even, odd = assign[::2], assign[1::2]
+    assert len(set(even.tolist())) == 1 and len(set(odd.tolist())) == 1
+    assert even[0] != odd[0]
+    assert float(metrics["dispersion"]) < 0.4
+
+
+def test_rewards_downweight_outliers_in_aggregation(small_model):
+    """The robust aggregation path gives outlier clients negative ΔR."""
+    rng = np.random.default_rng(1)
+    d = 16
+    base = rng.normal(size=d)
+    sk = np.stack([base + 0.05 * rng.normal(size=d) for _ in range(8)])
+    sk[3] = 40 * rng.normal(size=d)
+    state = clustering_init(2, d)
+    _, metrics = clustering_update(state, jnp.asarray(sk.astype(np.float32)))
+    rewards = np.asarray(metrics["rewards"])
+    assert rewards[3] < 0 and rewards[3] == rewards.min()
