@@ -1,0 +1,130 @@
+"""Round-latency benchmark: batched fused pipeline vs sequential per-cohort.
+
+Measures steady-state wall-clock per global round at a fixed leaf-cohort
+count (default 8, the seed `max_cohorts`). Both engines share the same
+population, config, and matching code; they differ only in the execution
+and feedback dispatch structure:
+
+- sequential — one padded `vmap(local_train)` dispatch PER cohort, host
+  aggregation, eager server-opt application, per-cohort clustering calls
+  (the seed engine's shape);
+- batched    — ONE fused jitted step for all cohorts (flat row axis +
+  stacked CohortBank) and ONE vmapped clustering dispatch.
+
+Writes BENCH_round_latency.json at the repo root.
+
+Usage:  PYTHONPATH=src python benchmarks/round_latency.py [--cohorts 8]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.clustering import OnlineClustering
+from repro.core.coordinator import CohortStats, PartitionEvent
+from repro.data import make_population
+from repro.fl import AuxoConfig, AuxoEngine, FLConfig
+from repro.fl.task import MLPTask
+
+
+def force_leaves(eng: AuxoEngine, n_leaves: int):
+    """Grow the cohort tree to n_leaves by unconditional binary partitions
+    (benchmark harness — skips the Lemma-4.1 criteria gate)."""
+    co = eng.coordinator
+    while len(co.tree.leaves()) < n_leaves:
+        leaf = co.tree.leaves()[0]
+        children = co.tree.partition(leaf, co.cluster_k)
+        for ch in children:
+            co.clusterers[ch] = OnlineClustering(
+                co.cluster_k, co.d_sketch, seed=co.seed + hash(ch) % 10_000
+            )
+            co.stats[ch] = CohortStats()
+        event = PartitionEvent(
+            parent=leaf,
+            children=children,
+            round_idx=0,
+            cluster_to_child={i: ch for i, ch in enumerate(children)},
+        )
+        cur = co.tree.leaves()
+        eng.pipeline.bank.spawn_children(event.parent, event.children)
+        eng.pipeline.table.seed_children(
+            eng.pipeline.bank.slot_of[event.parent],
+            [eng.pipeline.bank.slot_of[ch] for ch in event.children],
+        )
+        co.partitions.append(event)
+
+
+def bench(mode: str, n_leaves: int, rounds: int, warmup: int, seed: int):
+    pop = make_population(
+        n_clients=1000,
+        n_groups=n_leaves,
+        group_sep=0.0,
+        dirichlet=2.0,
+        label_conflict=0.6,
+        seed=seed,
+    )
+    task = MLPTask(dim=pop.dim, n_classes=pop.n_classes)
+    fl = FLConfig(
+        rounds=warmup + rounds,
+        participants_per_round=100,
+        use_availability=False,
+        seed=seed,
+        execution=mode,
+    )
+    auxo = AuxoConfig(
+        d_sketch=64,
+        cluster_k=2,
+        max_cohorts=n_leaves,
+        clustering_start_frac=0.0,
+        partition_start_frac=2.0,  # no organic partitions during timing
+        partition_end_frac=2.0,
+    )
+    eng = AuxoEngine(task, pop, fl, auxo)
+    force_leaves(eng, n_leaves)
+    for r in range(warmup):  # compile + first-touch (k-means bootstraps)
+        eng.step(r)
+    d0 = eng.pipeline.exec_dispatches
+    t0 = time.perf_counter()
+    for r in range(warmup, warmup + rounds):
+        eng.step(r)
+    dt = time.perf_counter() - t0
+    return {
+        "mode": mode,
+        "s_per_round": dt / rounds,
+        "exec_dispatches_per_round": (eng.pipeline.exec_dispatches - d0) / rounds,
+        "leaves": len(eng.coordinator.tree.leaves()),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cohorts", type=int, default=8)
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--warmup", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args()
+
+    seq = bench("sequential", args.cohorts, args.rounds, args.warmup, args.seed)
+    bat = bench("batched", args.cohorts, args.rounds, args.warmup, args.seed)
+    out = {
+        "benchmark": "round_latency",
+        "cohorts": args.cohorts,
+        "rounds_timed": args.rounds,
+        "sequential_s_per_round": seq["s_per_round"],
+        "batched_s_per_round": bat["s_per_round"],
+        "speedup": seq["s_per_round"] / bat["s_per_round"],
+        "sequential_exec_dispatches_per_round": seq["exec_dispatches_per_round"],
+        "batched_exec_dispatches_per_round": bat["exec_dispatches_per_round"],
+    }
+    path = Path(__file__).resolve().parent.parent / "BENCH_round_latency.json"
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(json.dumps(out, indent=2))
+
+
+if __name__ == "__main__":
+    main()

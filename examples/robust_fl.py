@@ -46,9 +46,9 @@ def main():
     # soft-state rebuild purely from client affinity requests (§5.1)
     reqs = []
     for c in range(0, 200):
-        pref = eng.affinity[c].preferred()
+        pref = eng.preferred_cohort(c)
         if pref:
-            reqs.append((c, pref, eng.affinity[c].cluster_index.get(pref, 0)))
+            reqs.append((c, pref, max(0, eng.client_cluster_index(c, pref))))
     co3 = CohortCoordinator(d_sketch=64)
     co3.rebuild_from_requests(reqs)
     print("soft-state rebuild from", len(reqs), "client requests ->", co3.tree.leaves())

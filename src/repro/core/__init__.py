@@ -6,23 +6,40 @@ hierarchical reward propagation (selection.py), the cohort tree and affinity
 messages (cohort.py), the Lemma-4.1 partition criteria (criteria.py), and the
 cohort coordinator (coordinator.py).
 """
-from repro.core.clustering import ClusterState, OnlineClustering
-from repro.core.cohort import AffinityMessage, CohortTree, tree_distance
-from repro.core.coordinator import CohortCoordinator
+from repro.core.clustering import (
+    ClusterState,
+    OnlineClustering,
+    assign_and_update_batched,
+    stack_states,
+    unstack_states,
+)
+from repro.core.cohort import AffinityMessage, CohortTree, distance_matrix, tree_distance
+from repro.core.coordinator import CohortCoordinator, CohortRoundFeedback
 from repro.core.criteria import PartitionCriteria
-from repro.core.selection import CohortSelector, instant_reward, update_rewards
+from repro.core.selection import (
+    CohortSelector,
+    instant_reward,
+    instant_reward_batched,
+    update_rewards,
+)
 from repro.core.sketch import GradientSketcher
 
 __all__ = [
     "ClusterState",
     "OnlineClustering",
+    "assign_and_update_batched",
+    "stack_states",
+    "unstack_states",
     "AffinityMessage",
     "CohortTree",
+    "distance_matrix",
     "tree_distance",
     "CohortCoordinator",
+    "CohortRoundFeedback",
     "PartitionCriteria",
     "CohortSelector",
     "instant_reward",
+    "instant_reward_batched",
     "update_rewards",
     "GradientSketcher",
 ]

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -176,6 +176,35 @@ def assign_and_update(
         ),
         assign,
         sims,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Stacked multi-cohort clustering: one vmapped dispatch for all leaf cohorts
+# ---------------------------------------------------------------------------
+def stack_states(states: Sequence[ClusterState]) -> ClusterState:
+    """Stack per-cohort states into one ClusterState with a leading C axis."""
+    return jax.tree.map(lambda *ls: jnp.stack(ls), *states)
+
+
+def unstack_states(stacked: ClusterState, n: int) -> list:
+    """Split a leading-C-axis ClusterState back into per-cohort states."""
+    return [jax.tree.map(lambda l: l[i], stacked) for i in range(n)]
+
+
+@partial(jax.jit, static_argnames=("ema",))
+def assign_and_update_batched(
+    stacked: ClusterState, sketches: jnp.ndarray, mask: jnp.ndarray, ema: float = 0.3
+) -> Tuple[ClusterState, jnp.ndarray, jnp.ndarray]:
+    """vmap of assign_and_update over a leading cohort axis.
+
+    stacked: ClusterState with (C, ...) leaves; sketches: (C, P, d);
+    mask: (C, P). One fused dispatch replaces C per-cohort host calls; the
+    kernels underneath (cosine_similarity / segment_aggregate) batch via
+    their leading-axis support.
+    """
+    return jax.vmap(lambda s, sk, m: assign_and_update(s, sk, m, ema))(
+        stacked, sketches, mask
     )
 
 

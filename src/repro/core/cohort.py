@@ -39,6 +39,23 @@ def tree_distance(a: str, b: str) -> int:
     return (len(pa) - common) + (len(pb) - common)
 
 
+def distance_matrix(ids: List[str]):
+    """Pairwise tree_distance over a list of cohort ids -> (n, n) int array.
+
+    Used by the vectorized ExploreReward propagation: reward spill to every
+    other leaf is delta / (distance + 1), computed for all leaves at once.
+    """
+    import numpy as np
+
+    n = len(ids)
+    out = np.zeros((n, n), np.int32)
+    for i in range(n):
+        for j in range(i + 1, n):
+            d = tree_distance(ids[i], ids[j])
+            out[i, j] = out[j, i] = d
+    return out
+
+
 @dataclasses.dataclass
 class CohortNode:
     cohort_id: str

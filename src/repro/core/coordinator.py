@@ -14,13 +14,20 @@ import pickle
 from pathlib import Path
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.clustering import OnlineClustering, population_heterogeneity
+from repro.core.clustering import (
+    OnlineClustering,
+    assign_and_update_batched,
+    population_heterogeneity,
+    stack_states,
+    unstack_states,
+)
 from repro.core.cohort import AffinityMessage, CohortTree
 from repro.core.criteria import PartitionCriteria
-from repro.core.selection import instant_reward
+from repro.core.selection import instant_reward, instant_reward_batched
 
 
 @dataclasses.dataclass
@@ -30,6 +37,17 @@ class PartitionEvent:
     round_idx: int
     # cluster index -> child id (clients map their L to the new cohort)
     cluster_to_child: Dict[int, str]
+
+
+@dataclasses.dataclass
+class CohortRoundFeedback:
+    """Per-cohort output of feedback_all: array-form affinity feedback."""
+
+    cohort_id: str
+    client_ids: List[int]
+    delta: np.ndarray  # (n,) instant rewards for the valid participants
+    assign: np.ndarray  # (n,) cluster indices (-1 before clustering starts)
+    event: Optional[PartitionEvent]
 
 
 @dataclasses.dataclass
@@ -199,6 +217,134 @@ class CohortCoordinator:
 
         event = self._maybe_partition(cohort_id, round_idx, total_rounds, n)
         return messages, event
+
+    def feedback_all(
+        self,
+        cohort_ids: Sequence[str],
+        client_ids_list: Sequence[Sequence[int]],
+        sketches: jnp.ndarray,
+        masks: jnp.ndarray,
+        round_idx: int,
+        total_rounds: int,
+        claimed_list: Optional[Sequence[Sequence[bool]]] = None,
+        batched: bool = True,
+    ) -> List[CohortRoundFeedback]:
+        """Batched ④-feedback for ALL leaf cohorts of a round (§3.2 stage 4).
+
+        sketches: (C, P, d) stacked per-cohort fingerprint batches, masks:
+        (C, P) validity weights; row i of each cohort's batch corresponds to
+        client_ids_list[c][i]. The clustering update and the instant-reward
+        computation run as ONE vmapped dispatch over the cohort axis
+        (stacked ClusterState) instead of C host round-trips; only the
+        once-per-cohort k-means bootstrap stays a per-cohort call. Partition
+        criteria are evaluated in cohort order with events applied
+        immediately, exactly like sequential per-cohort feedback() calls.
+        """
+        C = len(cohort_ids)
+        results: List[CohortRoundFeedback] = []
+        if C == 0:
+            return results
+        frac = round_idx / max(total_rounds, 1)
+        cluster_on = frac >= self.clustering_start_frac
+        P = int(sketches.shape[1])
+        # cohorts with no valid participants are left completely untouched,
+        # matching sequential feedback()'s n == 0 early return
+        n_by = [len(ids) for ids in client_ids_list]
+
+        assigns = np.full((C, P), -1, np.int32)
+        if cluster_on:
+            init_idx = [
+                i
+                for i, cid in enumerate(cohort_ids)
+                if n_by[i] > 0 and not bool(self.clusterers[cid].state.initialized)
+            ]
+            ready_idx = [
+                i for i in range(C) if n_by[i] > 0 and i not in set(init_idx)
+            ]
+            # once-per-cohort-lifetime k-means bootstrap (per-cohort call)
+            for i in init_idx:
+                a, _ = self.clusterers[cohort_ids[i]].step(sketches[i], masks[i])
+                assigns[i] = a
+            # every initialized cohort: ONE vmapped assign+EMA-refresh
+            # dispatch (batched), or the legacy per-cohort host calls
+            if ready_idx and batched:
+                stacked = stack_states(
+                    [self.clusterers[cohort_ids[i]].state for i in ready_idx]
+                )
+                sub = jnp.asarray(sketches)[jnp.asarray(ready_idx)]
+                msub = jnp.asarray(masks)[jnp.asarray(ready_idx)]
+                ema = self.clusterers[cohort_ids[ready_idx[0]]].ema
+                new_states, a, _sims = assign_and_update_batched(
+                    stacked, sub, msub, ema
+                )
+                a = np.asarray(a)
+                states = unstack_states(new_states, len(ready_idx))
+                for j, i in enumerate(ready_idx):
+                    self.clusterers[cohort_ids[i]].state = states[j]
+                    assigns[i] = a[j]
+            elif ready_idx:
+                for i in ready_idx:
+                    a, _ = self.clusterers[cohort_ids[i]].step(
+                        sketches[i], masks[i]
+                    )
+                    assigns[i] = a
+
+        # instant rewards for all cohorts: one vmapped dispatch (batched)
+        if batched:
+            deltas = np.asarray(
+                instant_reward_batched(jnp.asarray(sketches), jnp.asarray(masks))[0]
+            )
+        else:
+            deltas = np.stack(
+                [
+                    np.asarray(instant_reward(sketches[i], masks[i])[0])
+                    for i in range(C)
+                ]
+            )
+
+        for i, cid in enumerate(cohort_ids):
+            ids = list(client_ids_list[i])
+            n = len(ids)
+            if n == 0:
+                results.append(
+                    CohortRoundFeedback(cid, ids, np.zeros(0, np.float32), np.zeros(0, np.int32), None)
+                )
+                continue
+            st = self.stats[cid]
+            st.rounds_trained += 1
+            st.initial_participants = max(st.initial_participants, float(n))
+            if cluster_on and st.rounds_trained <= 3:
+                st.initial_heterogeneity = float(
+                    population_heterogeneity(sketches[i], masks[i])
+                )
+
+            # refresh this leaf's identity vector from member fingerprints
+            sk_np = np.asarray(sketches[i][:n], np.float32)
+            ident = sk_np.mean(0)
+            if cid in self.identity:
+                self.identity[cid] = 0.8 * self.identity[cid] + 0.2 * ident
+            else:
+                self.identity[cid] = ident
+
+            # §5.2 fake-affinity anomaly detection (vectorized strikes)
+            if claimed_list is not None:
+                claimed = np.asarray(claimed_list[i], bool)
+                for j in np.nonzero(claimed)[0]:
+                    cl = ids[int(j)]
+                    if deltas[i, j] < self.anomaly_threshold:
+                        self.strikes[cl] = self.strikes.get(cl, 0) + 1
+                        if self.strikes[cl] >= self.anomaly_strikes:
+                            self.blacklist.add(cl)
+                    else:
+                        self.strikes[cl] = max(0, self.strikes.get(cl, 0) - 1)
+
+            event = self._maybe_partition(cid, round_idx, total_rounds, n)
+            results.append(
+                CohortRoundFeedback(
+                    cid, ids, deltas[i, :n].copy(), assigns[i, :n].copy(), event
+                )
+            )
+        return results
 
     # ------------------------------------------------------------ partition
     def _maybe_partition(

@@ -43,6 +43,18 @@ def instant_reward(sketches: jnp.ndarray, mask=None) -> Tuple[jnp.ndarray, jnp.n
     return delta, d
 
 
+@jax.jit
+def instant_reward_batched(
+    sketches: jnp.ndarray, mask: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """instant_reward vmapped over a leading cohort axis.
+
+    sketches: (C, P, d), mask: (C, P) -> (delta (C, P), distances (C, P)).
+    One dispatch for all leaf cohorts of a round.
+    """
+    return jax.vmap(instant_reward)(sketches, mask)
+
+
 def update_rewards(prev: float, delta: float, gamma: float = 0.2) -> float:
     return gamma * delta + (1.0 - gamma) * prev
 

@@ -1,12 +1,14 @@
-"""FL substrate: server algorithms, client execution, round engine, baselines."""
-from repro.fl.algorithms import SERVER_OPTS, ServerOpt, make_server_opt
+"""FL substrate: server algorithms, client execution, round pipeline, baselines."""
+from repro.fl.algorithms import SERVER_OPTS, ServerOpt, apply_stacked, make_server_opt
 from repro.fl.client import local_train
 from repro.fl.engine import AuxoConfig, AuxoEngine, FLConfig, run_auxo, run_fl
+from repro.fl.pipeline import AffinityTable, CohortBank, MatchPlan, RoundPipeline
 from repro.fl.task import MLPTask
 
 __all__ = [
     "SERVER_OPTS",
     "ServerOpt",
+    "apply_stacked",
     "make_server_opt",
     "local_train",
     "AuxoConfig",
@@ -14,5 +16,9 @@ __all__ = [
     "FLConfig",
     "run_auxo",
     "run_fl",
+    "AffinityTable",
+    "CohortBank",
+    "MatchPlan",
+    "RoundPipeline",
     "MLPTask",
 ]

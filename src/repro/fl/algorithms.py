@@ -87,6 +87,27 @@ def make_server_opt(name: str, **kw) -> ServerOpt:
 
 
 # ---------------------------------------------------------------------------
+# Stacked multi-cohort application: one vmapped server-opt step for the bank
+# ---------------------------------------------------------------------------
+def apply_stacked(opt: ServerOpt, params, state, delta, update_mask):
+    """Apply `opt` to every cohort slot of a CohortBank in one vmapped call.
+
+    params/state/delta leaves carry a leading cohort axis (C, ...);
+    update_mask is a (C,) bool vector — rows where it is False (cohorts that
+    did not train this round, or empty bank slots) keep their params and
+    opt state bit-identical. Traceable: called from inside the pipeline's
+    fused round step.
+    """
+    new_p, new_s = jax.vmap(opt.apply)(params, state, delta)
+
+    def sel(n, o):
+        m = update_mask.reshape((-1,) + (1,) * (n.ndim - 1))
+        return jnp.where(m, n, o)
+
+    return jax.tree.map(sel, new_p, params), jax.tree.map(sel, new_s, state)
+
+
+# ---------------------------------------------------------------------------
 # q-FedAvg aggregation weights (Li et al., Fair Resource Allocation, ICLR'20)
 # ---------------------------------------------------------------------------
 def qfedavg_weights(losses: jnp.ndarray, q: float = 1.0) -> jnp.ndarray:

@@ -1,43 +1,48 @@
 """Multi-cohort FL engine: the full Auxo lifecycle (paper Fig. 6).
 
-Per global round:
+Per global round (all three stages live in fl/pipeline.py):
+
   ① matching   — available clients submit affinity requests (decaying
                  ε-greedy over their client-held reward records) and the
-                 coordinator matches them to leaf cohorts;
-  ②③ FL round  — each leaf cohort independently selects participants
-                 (equal share of the round's resource budget, with
-                 over-commitment straggler drop), runs vmapped local
-                 training, aggregates (FedAvg/YoGi/…; q-FedAvg weights),
-                 and applies its server optimizer;
-  ④ feedback   — each cohort clusters the round's gradient sketches
-                 (Algorithm 1), sends affinity messages back, and the
-                 coordinator evaluates the partition criteria; on partition
-                 the children warm-start from the parent model (§4.2) and
-                 clients inherit child rewards R + 0.1·1(L == k)
-                 (Algorithm 1 line 22).
+                 coordinator matches them to leaf cohorts; vectorized as
+                 dense-table masking plus one fingerprint-vs-identity
+                 cosine-similarity call;
+  ②③ FL round  — ALL leaf cohorts select participants (equal share of the
+                 round's resource budget, with over-commitment straggler
+                 drop) and run local training + masked aggregation
+                 (FedAvg/YoGi/…; q-FedAvg weights) + the server optimizer
+                 in ONE fused jitted step over the stacked CohortBank;
+  ④ feedback   — the coordinator clusters every cohort's gradient sketches
+                 in one vmapped dispatch (Algorithm 1), affinity rewards
+                 flow back into the dense tables, and the partition
+                 criteria spawn warm-started children (§4.2) with
+                 inherited rewards R + 0.1·1(L == k) (Algorithm 1 line 22).
 
 Wall-clock is simulated from device-speed traces; cohorts advance their own
 clocks in parallel (they are independent FL jobs). Resource = client·steps.
+
+``FLConfig.execution`` selects the batched fused path (default) or the
+sequential per-cohort reference oracle used by equivalence tests and the
+round-latency benchmark.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.cohort import ClientAffinity
 from repro.core.coordinator import CohortCoordinator, PartitionEvent
 from repro.core.criteria import PartitionCriteria
 from repro.core.selection import CohortSelector
 from repro.core.sketch import GradientSketcher
 from repro.data.availability import AvailabilityTrace, DeviceSpeeds
 from repro.data.datasets import FederatedClassification
-from repro.fl.algorithms import make_server_opt, qfedavg_weights
+from repro.fl.algorithms import make_server_opt
 from repro.fl.client import local_train
-from repro.utils import tree_scale
+from repro.fl.pipeline import RoundPipeline
 
 
 @dataclasses.dataclass
@@ -56,6 +61,9 @@ class FLConfig:
     speed_sigma: float = 0.6
     eval_every: int = 5
     seed: int = 0
+    # execution mode: "batched" = one fused device step per round (default);
+    # "sequential" = per-cohort dispatches (reference oracle)
+    execution: str = "batched"
     # resilience knobs (§7.5)
     corrupt_frac: float = 0.0
     dp_clip: float = 0.0
@@ -94,6 +102,12 @@ class AuxoConfig:
     # fingerprint match is unconfident and who hold no positive leaf reward
     # — a confidently-wrong specialist is worse than the generalist.
     serve_confidence: float = 0.05
+    # Beyond-paper: clients with NO training fingerprint (never kept in a
+    # round) compute a one-shot probe sketch against the root model at
+    # serve time and are identity-matched like everyone else. Without this
+    # they would be spread by client-id parity — i.e. served a uniformly
+    # random specialist.
+    probe_serving: bool = True
     min_members: int = 15
     margin_threshold: float = 0.4
     het_reduction_slack: float = 2.0
@@ -102,6 +116,8 @@ class AuxoConfig:
 
 @dataclasses.dataclass
 class CohortModel:
+    """Host-side view of one bank slot (params/opt live stacked in the bank)."""
+
     params: Any
     opt_state: Any
     clock: float = 0.0
@@ -123,11 +139,8 @@ class AuxoEngine:
         self.rng = np.random.default_rng(fl.seed)
         key = jax.random.key(fl.seed)
 
-        params = task.init(key)
+        self._init_params = task.init(key)
         self.server_opt = make_server_opt(fl.algorithm, lr=fl.server_lr)
-        self.cohorts: Dict[str, CohortModel] = {
-            "0": CohortModel(params=params, opt_state=self.server_opt.init(params))
-        }
         self.coordinator = CohortCoordinator(
             d_sketch=self.auxo.d_sketch,
             cluster_k=self.auxo.cluster_k,
@@ -160,7 +173,6 @@ class AuxoEngine:
         else:
             strat = "full_proj" if self.auxo.sketch_strategy == "auto" else self.auxo.sketch_strategy
             self.sketcher = GradientSketcher(d_sketch=self.auxo.d_sketch, strategy=strat)
-        self.affinity = [ClientAffinity() for _ in range(population.n_clients)]
         self.trace = AvailabilityTrace(population.n_clients, seed=fl.seed)
         self.speeds = DeviceSpeeds(population.n_clients, sigma=fl.speed_sigma, seed=fl.seed)
         n_corrupt = int(fl.corrupt_frac * population.n_clients)
@@ -181,7 +193,6 @@ class AuxoEngine:
         self.global_mu = np.zeros(self.auxo.d_sketch, np.float32)
         self.global_mu_seen = False
 
-        self._quota = max(2, int(fl.participants_per_round * fl.overcommit))
         self._vmapped_sketch = jax.jit(jax.vmap(self.sketcher))
         self._vmapped_train = jax.vmap(
             lambda p, xs, ys, k: local_train(
@@ -197,6 +208,37 @@ class AuxoEngine:
             ),
             in_axes=(None, 0, 0, 0),
         )
+        self.pipeline = RoundPipeline(self, mode=fl.execution)
+
+    # -------------------------------------------------------------- views
+    @property
+    def cohorts(self) -> Dict[str, CohortModel]:
+        """Per-cohort model view over the stacked CohortBank."""
+        bank = self.pipeline.bank
+        return {
+            cid: CohortModel(
+                params=bank.params_of(cid),
+                opt_state=bank.opt_state_of(cid),
+                clock=float(bank.clock[slot]),
+                rounds=int(bank.rounds[slot]),
+            )
+            for cid, slot in bank.slot_of.items()
+        }
+
+    def preferred_cohort(self, c: int) -> Optional[str]:
+        """The leaf cohort with this client's highest reward record."""
+        bank = self.pipeline.bank
+        leaves = self.coordinator.tree.leaves()
+        slots = np.array([bank.slot_of[l] for l in leaves])
+        slot = self.pipeline.table.preferred_slot(c, slots)
+        return None if slot is None else bank.id_of[slot]
+
+    def client_cluster_index(self, c: int, cohort_id: str) -> int:
+        """The client's sub-cluster index L inside `cohort_id` (-1 unknown)."""
+        slot = self.pipeline.bank.slot_of.get(cohort_id)
+        if slot is None:
+            return -1
+        return int(self.pipeline.table.cluster_idx[c, slot])
 
     # ------------------------------------------------------------------ API
     def run(self) -> List[Dict[str, Any]]:
@@ -208,215 +250,81 @@ class AuxoEngine:
 
     # ------------------------------------------------------------ one round
     def step(self, r: int):
-        fl = self.fl
-        if fl.use_availability:
-            available = self.trace.available(r, self.rng)
-        else:
-            available = np.arange(self.pop.n_clients)
-        available = [c for c in available if c not in self.coordinator.blacklist]
-        if len(available) == 0:
-            return
-
-        # ① matching stage: clients submit affinity requests
-        leaves = self.coordinator.tree.leaves()
-        requests: Dict[str, List[int]] = {l: [] for l in leaves}
-        claimed: Dict[str, List[bool]] = {l: [] for l in leaves}
-        for c in available:
-            if self.auxo.enabled and len(leaves) > 1:
-                want = self.selector.select(self.rng, self.affinity[c].rewards, leaves, r)
-                # a client whose best affinity is non-positive is an outlier
-                # everywhere it has trained — request the root instead and
-                # let the coordinator's prototype descent place it (§5.1).
-                # With assisted_matching every fingerprinted client resolves
-                # by prototype descent unless it is exploring.
-                exploring = want not in self.affinity[c].rewards
-                if self.neg_streak[c] >= self.auxo.neg_streak_explore:
-                    # persistently an outlier where the system puts it:
-                    # decay the (possibly stale) fingerprint so fresh rounds
-                    # dominate its EMA, and explore a random leaf. (ΔR is
-                    # relative, so outright wiping punishes unlucky correct
-                    # clients — measured worse.)
-                    if self.auxo.fp_decay_on_streak < 1.0:
-                        self.fingerprint[c] *= self.auxo.fp_decay_on_streak
-                    self.neg_streak[c] = 0
-                    want = leaves[self.rng.integers(len(leaves))]
-                    exploring = True
-                best_r = self.affinity[c].rewards.get(want, 0.0)
-                thresh = self.auxo.reward_stick if self.auxo.assisted_matching else 0.0
-                if self.fp_seen[c] and not exploring and best_r <= thresh:
-                    want = "0"
-            else:
-                want = leaves[0]
-            L = self.affinity[c].cluster_index.get(want, -1)
-            fp = self.fingerprint[c] if self.fp_seen[c] else None
-            leaf = self.coordinator.match_request(c, want, L, fingerprint=fp)
-            if leaf is None:
-                continue
-            requests[leaf].append(c)
-            claimed[leaf].append(self.affinity[c].preferred() == leaf)
-
-        # per-cohort resource budget: equal split of the round budget (§4.4);
-        # fixed per leaf-count so padded batch shapes compile once.
-        self._quota = max(2, int(fl.participants_per_round * fl.overcommit / len(leaves)))
-
-        for leaf in leaves:
-            cands = requests[leaf]
-            if len(cands) < 2:
-                continue
-            take = min(self._quota, len(cands))
-            sel_idx = self.rng.choice(len(cands), size=take, replace=False)
-            part = [cands[i] for i in sel_idx]
-            part_claimed = [claimed[leaf][i] for i in sel_idx]
-            self._cohort_round(leaf, part, part_claimed, r)
-
-    def _cohort_round(self, leaf: str, participants: List[int], claimed: List[bool], r: int):
-        fl = self.fl
-        cm = self.cohorts[leaf]
-        n_real = len(participants)
-        pad = self._quota - n_real  # batches padded to a fixed size so every
-        # jit below compiles once per quota (quota changes only on partition)
-        padded = participants + [participants[0]] * pad
-
-        # ② execution: sample local data, flip labels for corrupted clients
-        xs, ys, sizes = [], [], []
-        for c in padded:
-            x, y = self.pop.sample_batch(c, fl.batch_size, fl.local_steps, self.rng)
-            if c in self.corrupted:
-                y = self.rng.integers(0, self.pop.n_classes, size=y.shape).astype(y.dtype)
-            xs.append(x)
-            ys.append(y)
-            sizes.append(len(self.pop.clients[c].y))
-        xs = jnp.asarray(np.stack(xs))
-        ys = jnp.asarray(np.stack(ys))
-        keys = jax.random.split(jax.random.key(self.rng.integers(2**31)), len(padded))
-
-        deltas, losses = self._vmapped_train(cm.params, xs, ys, keys)
-        self.resource_used += n_real * fl.local_steps * fl.batch_size
-
-        # straggler over-commitment drop (system heterogeneity)
-        kept, duration = self.speeds.round_duration(
-            participants,
-            [fl.local_steps * fl.batch_size] * n_real,
-            overcommit=fl.overcommit,
-        )
-        kept_pos = [participants.index(c) for c in kept]
-        kept_set = set(kept_pos)
-        cm.clock += duration
-        cm.rounds += 1
-
-        # ③ aggregation (kept participants only, fixed-shape weighting)
-        losses_np = np.asarray(losses)
-        if fl.qfed_q > 0:
-            w = np.power(np.maximum(losses_np, 1e-6), fl.qfed_q)
-        else:
-            w = np.asarray(sizes, np.float64)
-        w = np.array([w[i] if i in kept_set else 0.0 for i in range(len(padded))])
-        w = jnp.asarray(w / max(w.sum(), 1e-9), jnp.float32)
-        agg = jax.tree.map(lambda d: jnp.tensordot(w, d, axes=1), deltas)
-        cm.params, cm.opt_state = self.server_opt.apply(cm.params, cm.opt_state, agg)
-
-        # ④ feedback stage
-        if not self.auxo.enabled:
-            return
-        sketches = np.asarray(self._vmapped_sketch(deltas))
-        kept_ids = [participants[i] for i in kept_pos]
-        # update client-held fingerprints: center by the round mean (removes
-        # the shared descent direction), normalize, EMA
-        sk_kept = sketches[kept_pos]
-        round_mu = sk_kept.mean(0)
-        if self.global_mu_seen:
-            self.global_mu = 0.8 * self.global_mu + 0.2 * round_mu
-        else:
-            self.global_mu, self.global_mu_seen = round_mu.copy(), True
-        ctr = sk_kept - self.global_mu[None, :]
-        ctr /= np.linalg.norm(ctr, axis=1, keepdims=True) + 1e-9
-        for j, cid in enumerate(kept_ids):
-            if fl.affinity_loss_rate > 0 and self.rng.random() < fl.affinity_loss_rate:
-                self.fingerprint[cid] = 0.0
-                self.fp_seen[cid] = False
-            if self.fp_seen[cid]:
-                self.fingerprint[cid] = (1 - self.fp_beta) * self.fingerprint[cid] + self.fp_beta * ctr[j]
-            else:
-                self.fingerprint[cid] = ctr[j]
-                self.fp_seen[cid] = True
-        # cohort feedback runs on the fingerprints (kept first, then padding)
-        fp = np.zeros((len(padded), sk_kept.shape[1]), np.float32)
-        fp[: len(kept_ids)] = self.fingerprint[kept_ids]
-        sk = jnp.asarray(fp)
-        mask = jnp.asarray(
-            np.array([1.0] * len(kept_pos) + [0.0] * (len(padded) - len(kept_pos)), np.float32)
-        )
-        msgs, event = self.coordinator.feedback(
-            leaf,
-            kept_ids,
-            sk,
-            r,
-            fl.rounds,
-            claimed_preferred=[claimed[i] for i in kept_pos],
-            mask=mask,
-        )
-        known = self.coordinator.tree.leaves()
-        for cid, msg in msgs.items():
-            if msg.reward < 0:
-                self.neg_streak[cid] += 1
-            else:
-                self.neg_streak[cid] = 0
-            if fl.affinity_loss_rate > 0 and self.rng.random() < fl.affinity_loss_rate:
-                self.affinity[cid].wipe()  # unstable client restarts exploring
-                continue
-            self.affinity[cid].update_from_feedback(msg, self.auxo.gamma)
-            self.affinity[cid].propagate_explore(msg.cohort_id, msg.reward, known)
-
-        if event is not None:
-            self._apply_partition(event)
+        """One global round: MatchPlan → BatchedExecution → FeedbackBatch."""
+        self.pipeline.run_round(r)
 
     def _apply_partition(self, event: PartitionEvent):
-        parent = self.cohorts[event.parent]
-        for child in event.children:
-            self.cohorts[child] = CohortModel(
-                params=jax.tree.map(jnp.copy, parent.params),  # warm start
-                opt_state=jax.tree.map(jnp.copy, parent.opt_state),
-                clock=parent.clock,
-                rounds=parent.rounds,
-            )
-        # Algorithm 1 line 22: seed child rewards from parent affinity
-        for c in range(self.pop.n_clients):
-            aff = self.affinity[c]
-            if event.parent in aff.rewards:
-                L = aff.cluster_index.get(event.parent, 0)
-                base = aff.rewards[event.parent]
-                for k, child in event.cluster_to_child.items():
-                    aff.rewards[child] = base + (0.1 if L == k else 0.0)
-                    aff.cluster_index[child] = 0
+        """Warm-start children + seed child rewards (kept for direct use)."""
+        self.pipeline._apply_partition(event, self.coordinator.tree.leaves())
 
     # ----------------------------------------------------------------- eval
+    def _probe_fingerprint(self, c: int) -> np.ndarray:
+        """One-shot serve-time fingerprint for a never-trained client.
+
+        The client runs its usual local steps against the ROOT model, the
+        update is sketched and centered against the global reference mean —
+        the same signal training fingerprints EMA over, just single-round.
+        Deterministic per client (own rng / key), so it never perturbs the
+        training RNG stream.
+        """
+        rng = np.random.default_rng(700_001 + c)
+        x, y = self.pop.sample_batch(c, self.fl.batch_size, self.fl.local_steps, rng)
+        delta, _ = local_train(
+            self.task.loss,
+            self.pipeline.bank.params_of("0"),
+            jnp.asarray(x),
+            jnp.asarray(y),
+            jax.random.key(c),
+            lr=self.fl.lr,
+        )
+        sk = np.asarray(self._vmapped_sketch(jax.tree.map(lambda a: a[None], delta)))[0]
+        ctr = sk - self.global_mu
+        return (ctr / (np.linalg.norm(ctr) + 1e-9)).astype(np.float32)
+
     def client_cohort(self, c: int) -> str:
         """Cohort whose model SERVES client c (evaluation-time routing).
 
         Fingerprint identity-matching first (the strongest signal; ΔR
         rewards are only *relative* within a round). An unconfident match
         falls back to the retained ancestor (generalist) model — a
-        confidently-wrong specialist is worse than the generalist.
+        confidently-wrong specialist is worse than the generalist. Clients
+        without a training fingerprint probe one (see _probe_fingerprint).
         """
-        aff = self.affinity[c]
+        can_probe = (
+            self.auxo.enabled
+            and self.auxo.probe_serving
+            and self.global_mu_seen
+            and len(self.coordinator.identity) >= 2
+        )
+        fp = None
         if self.fp_seen[c]:
-            leaf, margin = self.coordinator.match_with_confidence(self.fingerprint[c])
+            fp = self.fingerprint[c]
+        elif can_probe:
+            fp = self._probe_fingerprint(c)
+        if fp is not None:
+            leaf, margin = self.coordinator.match_with_confidence(fp)
+            if leaf is not None and margin < self.auxo.serve_confidence and can_probe and self.fp_seen[c]:
+                # stale-EMA rescue: an unconfident training fingerprint may
+                # simply lag the cohorts' drift — retry with a fresh probe
+                leaf, margin = self.coordinator.match_with_confidence(
+                    self._probe_fingerprint(c)
+                )
             if leaf is not None and margin >= self.auxo.serve_confidence:
                 return leaf
             if leaf is not None:
                 return "0"  # generalist (pre-partition) model
-        pref = aff.preferred() or "0"
-        L = aff.cluster_index.get(pref, -1)
-        return self.coordinator.match_request(c, pref, L) or "0"
+        pref = self.preferred_cohort(c) or "0"
+        return self.coordinator.match_request(c, pref, -1) or "0"
 
     def evaluate(self, r: int) -> Dict[str, Any]:
         # per-client accuracy: its serving cohort's model on its group data
         # (serving may fall back to an ANCESTOR model — see client_cohort)
         leaves = self.coordinator.tree.leaves()
+        cohorts = self.cohorts
         serving = [self.client_cohort(c) for c in range(self.pop.n_clients)]
         accs_by = {}
         for cid in set(serving) | set(leaves):
-            p = self.cohorts[cid].params
+            p = cohorts[cid].params
             accs_by[cid] = {
                 g: self.task.accuracy(p, self.pop.test_x[g], self.pop.test_y[g])
                 for g in range(self.pop.n_groups)
@@ -429,7 +337,7 @@ class AuxoEngine:
         )
         srt = np.sort(per_client)
         n10 = max(1, len(srt) // 10)
-        clock = max(cm.clock for l, cm in self.cohorts.items() if l in leaves)
+        clock = max(cm.clock for l, cm in cohorts.items() if l in leaves)
         return {
             "round": r,
             "time": clock,
@@ -447,9 +355,10 @@ class AuxoEngine:
     def ftfa_eval(self, steps: int = 5) -> float:
         """Fine-tune-then-average personalization on top of cohort models."""
         accs = []
+        cohorts = self.cohorts
         for c in range(0, self.pop.n_clients, max(1, self.pop.n_clients // 100)):
             leaf = self.client_cohort(c)
-            p = self.cohorts[leaf].params
+            p = cohorts[leaf].params
             x, y = self.pop.sample_batch(c, self.fl.batch_size, steps, self.rng)
             delta, _ = local_train(
                 self.task.loss, p, jnp.asarray(x), jnp.asarray(y),

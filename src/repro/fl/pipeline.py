@@ -1,0 +1,668 @@
+"""Staged, compile-once, cohort-batched round pipeline (the Auxo hot path).
+
+The seed engine executed cohorts one at a time — per leaf cohort one
+`vmap(local_train)` dispatch, a host-side numpy aggregation, an eager
+server-opt application, and a separate clustering round-trip — so round
+wall-clock grew linearly with the cohort count, and every partition mutated
+the padded batch shape (`quota`) and recompiled everything. This module
+rearchitects that path into three explicit stages:
+
+  ① MatchPlan        — vectorized matching: ε-greedy + sticky-reward +
+                       negative-streak logic as numpy masks over dense
+                       per-(client, cohort-slot) affinity tables, and ONE
+                       `kops.cosine_similarity` call of the (N, d)
+                       fingerprint matrix against the (C, d) leaf-identity
+                       matrix (replacing N per-client tree descents).
+  ② BatchedExecution — all leaf cohorts train in ONE jitted fused step of
+                       fixed shape: participants of every cohort are packed
+                       along a flat row axis of width B (the full round
+                       budget), each row gathers its cohort's params from
+                       the stacked CohortBank, local training runs as one
+                       `vmap` over rows, aggregation is a masked
+                       segment-sum over cohort slots, and the server
+                       optimizer applies to all slots via `vmap`
+                       (`algorithms.apply_stacked`). Shapes depend only on
+                       the round budget and bank capacity — partitions
+                       never recompile.
+  ③ FeedbackBatch    — client fingerprint EMAs update vectorized, then
+                       `CohortCoordinator.feedback_all` runs clustering +
+                       instant rewards for ALL cohorts as one vmapped
+                       dispatch over a stacked ClusterState; affinity
+                       rewards, ExploreReward propagation, and partition
+                       events apply as dense table updates.
+
+The sequential per-cohort path survives as a REFERENCE ORACLE
+(`mode="sequential"`): it consumes the same MatchPlan and applies the same
+feedback, but executes one device dispatch per cohort exactly like the
+seed engine — equivalence tests check both modes produce the same models,
+and benchmarks/round_latency.py measures the speedup.
+
+Semantic deltas vs the seed engine (documented, benign):
+- client affinity lives in dense tables over *leaf slots*; stale non-leaf
+  cohort ids no longer accumulate reward crumbs (the coordinator previously
+  resolved such stale requests by tree descent — with synchronous table
+  reseeding at partition time, stale requests cannot arise);
+- host RNG draws are batched per round instead of per client/cohort, so
+  trajectories differ from the seed engine draw-for-draw while remaining
+  statistically identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cohort import distance_matrix
+from repro.fl.algorithms import apply_stacked
+from repro.fl.client import local_train
+from repro.kernels import ops as kops
+
+
+# ---------------------------------------------------------------------------
+# CohortBank: every cohort's params/opt-state stacked on a leading slot axis
+# ---------------------------------------------------------------------------
+class CohortBank:
+    """Stacked pytree storage for all cohort models, fixed capacity.
+
+    Leaf arrays have shape (capacity, ...); slot 0 is the root cohort "0".
+    Partitions copy the parent slot into freshly allocated child slots
+    (device-side scatter) — array shapes never change, so the fused round
+    step compiles exactly once.
+    """
+
+    def __init__(self, params, opt_state, capacity: int):
+        self.capacity = capacity
+        self.params = jax.tree.map(
+            lambda a: jnp.zeros((capacity,) + a.shape, a.dtype).at[0].set(a), params
+        )
+        self.opt_state = jax.tree.map(
+            lambda a: jnp.zeros((capacity,) + a.shape, a.dtype).at[0].set(a),
+            opt_state,
+        )
+        self.slot_of: Dict[str, int] = {"0": 0}
+        self.id_of: Dict[int, str] = {0: "0"}
+        self.clock = np.zeros(capacity, np.float64)
+        self.rounds = np.zeros(capacity, np.int64)
+        self._next = 1
+
+    def params_of(self, cohort_id: str):
+        i = self.slot_of[cohort_id]
+        return jax.tree.map(lambda a: a[i], self.params)
+
+    def opt_state_of(self, cohort_id: str):
+        i = self.slot_of[cohort_id]
+        return jax.tree.map(lambda a: a[i], self.opt_state)
+
+    def spawn_children(self, parent: str, children: List[str]) -> List[int]:
+        """Warm-start child slots from the parent slot (§4.2)."""
+        ps = self.slot_of[parent]
+        idx = []
+        for ch in children:
+            if self._next >= self.capacity:
+                raise RuntimeError(
+                    f"CohortBank capacity {self.capacity} exhausted at {ch}"
+                )
+            self.slot_of[ch] = self._next
+            self.id_of[self._next] = ch
+            idx.append(self._next)
+            self._next += 1
+        ii = jnp.asarray(idx)
+        self.params = jax.tree.map(lambda a: a.at[ii].set(a[ps]), self.params)
+        self.opt_state = jax.tree.map(lambda a: a.at[ii].set(a[ps]), self.opt_state)
+        self.clock[idx] = self.clock[ps]
+        self.rounds[idx] = self.rounds[ps]
+        return idx
+
+
+# ---------------------------------------------------------------------------
+# Dense client-affinity tables (soft state, vectorized)
+# ---------------------------------------------------------------------------
+class AffinityTable:
+    """Per-(client, cohort-slot) reward records as dense arrays.
+
+    The seed engine held one python dict per client; matching then looped
+    over N clients per round. Dense tables make the whole ①-matching stage
+    a handful of numpy array ops.
+    """
+
+    def __init__(self, n_clients: int, capacity: int):
+        self.reward = np.zeros((n_clients, capacity), np.float32)
+        self.known = np.zeros((n_clients, capacity), bool)
+        self.cluster_idx = np.full((n_clients, capacity), -1, np.int32)
+
+    def wipe(self, cids: np.ndarray):
+        """§5.2 unstable clients: lost soft state restarts exploration."""
+        self.reward[cids] = 0.0
+        self.known[cids] = False
+        self.cluster_idx[cids] = -1
+
+    def feedback(self, cids: np.ndarray, slot: int, delta: np.ndarray, gamma: float):
+        """EMA reward-record update: R <- γ·ΔR + (1−γ)·R."""
+        self.reward[cids, slot] = (
+            gamma * delta + (1.0 - gamma) * self.reward[cids, slot]
+        )
+        self.known[cids, slot] = True
+
+    def set_cluster(self, cids: np.ndarray, slot: int, assign: np.ndarray):
+        has = assign >= 0  # -1 = clustering not yet started
+        self.cluster_idx[cids[has], slot] = assign[has]
+
+    def propagate(self, cids: np.ndarray, delta: np.ndarray, slot_dist: Dict[int, int]):
+        """ExploreReward (§4.3): push ΔR/(d+1) to the other leaves."""
+        for other_slot, d in slot_dist.items():
+            self.reward[cids, other_slot] += delta / (d + 1)
+            self.known[cids, other_slot] = True
+
+    def seed_children(self, parent_slot: int, child_slots: List[int]):
+        """Algorithm 1 line 22: child rewards R + 0.1·1(L == k)."""
+        has = self.known[:, parent_slot]
+        base = self.reward[has, parent_slot]
+        L = self.cluster_idx[has, parent_slot]
+        for k, cs in enumerate(child_slots):
+            self.reward[has, cs] = base + np.where(L == k, 0.1, 0.0)
+            self.known[has, cs] = True
+            self.cluster_idx[has, cs] = 0
+
+    def preferred_slot(self, c: int, slots: np.ndarray) -> Optional[int]:
+        known = self.known[c, slots]
+        if not known.any():
+            return None
+        masked = np.where(known, self.reward[c, slots], -np.inf)
+        return int(slots[int(np.argmax(masked))])
+
+
+# ---------------------------------------------------------------------------
+# Stage outputs
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class MatchPlan:
+    """Stage-① output: the round's flat, fixed-width execution layout."""
+
+    round_idx: int
+    leaves: List[str]  # all leaf cohorts, tree order
+    active: List[str]  # leaves that train this round (≥ 2 candidates)
+    slot_rows: np.ndarray  # (B,) int32 bank slot per flat row
+    client_rows: np.ndarray  # (B,) int32 client id per row
+    real: np.ndarray  # (B,) bool — row is a real participant (not padding)
+    kept: np.ndarray  # (B,) bool — survived the over-commitment straggler drop
+    claimed: np.ndarray  # (B,) bool — client requested this cohort as best-fit
+    sizes: np.ndarray  # (B,) float32 client dataset sizes
+    update_slots: np.ndarray  # (capacity,) bool — slots that train this round
+    durations: Dict[str, float]
+    key_seed: int
+
+
+@dataclasses.dataclass
+class ExecResult:
+    """Stage-② output: per-row training artifacts (host copies)."""
+
+    sketches: np.ndarray  # (B, d_sketch)
+    losses: np.ndarray  # (B,)
+
+
+# ---------------------------------------------------------------------------
+# The pipeline
+# ---------------------------------------------------------------------------
+class RoundPipeline:
+    """Drives one global round as MatchPlan → BatchedExecution → FeedbackBatch.
+
+    mode="batched"   — one fused jitted dispatch for the execution stage and
+                       one vmapped dispatch for the feedback clustering,
+                       independent of the leaf-cohort count.
+    mode="sequential" — reference oracle: same plan, same feedback
+                       application, but per-cohort device dispatches like
+                       the seed engine (used by equivalence tests and the
+                       round-latency benchmark baseline).
+    """
+
+    def __init__(self, engine, mode: str = "batched"):
+        assert mode in ("batched", "sequential"), mode
+        self.eng = engine
+        self.mode = mode
+        fl, auxo = engine.fl, engine.auxo
+        k = max(2, auxo.cluster_k)
+        if auxo.enabled:
+            # partitions stop once leaves >= max_cohorts, but the LAST
+            # partition can overshoot: leaves after p splits = 1 + (k-1)p,
+            # so the true ceiling is 1 + (k-1)·ceil((max_cohorts-1)/(k-1))
+            n_partitions = -(-(auxo.max_cohorts - 1) // (k - 1))  # ceil
+            capacity = 1 + k * n_partitions
+            self.max_leaves = 1 + (k - 1) * n_partitions
+        else:
+            capacity = 1
+            self.max_leaves = 1
+        self.bank = CohortBank(
+            engine._init_params, engine.server_opt.init(engine._init_params), capacity
+        )
+        self.table = AffinityTable(engine.pop.n_clients, capacity)
+        # flat execution width: the full round budget, fixed for the run.
+        # L·quota(L) ≤ max(int(P·oc), 2·L) for every leaf count L, so this
+        # width fits every partition state without a reshape.
+        self.width = max(
+            2, int(fl.participants_per_round * fl.overcommit), 2 * self.max_leaves
+        )
+        self.exec_dispatches = 0  # device dispatches issued by stage ② so far
+        self._exec_step = self._make_exec_step()
+
+    # ------------------------------------------------------------ stage ①
+    def plan_round(self, r: int) -> Optional[MatchPlan]:
+        eng, fl, auxo = self.eng, self.eng.fl, self.eng.auxo
+        if fl.use_availability:
+            avail = np.asarray(eng.trace.available(r, eng.rng))
+        else:
+            avail = np.arange(eng.pop.n_clients)
+        bl = eng.coordinator.blacklist
+        if bl:
+            avail = avail[~np.isin(avail, np.fromiter(bl, int, len(bl)))]
+        if avail.size == 0:
+            return None
+
+        leaves = eng.coordinator.tree.leaves()
+        slots = np.array([self.bank.slot_of[l] for l in leaves])
+        nA = avail.size
+
+        if auxo.enabled and len(leaves) > 1:
+            want, claimed = self._match_vectorized(r, avail, leaves, slots)
+        else:
+            want = np.zeros(nA, np.int64)
+            # single-leaf rounds: a client "claims" the (only) cohort iff it
+            # is its preferred one, i.e. it holds any reward record there —
+            # keeps the §5.2 fake-affinity detection live pre-partition
+            claimed = self.table.known[avail, slots[0]]
+
+        # per-cohort resource budget: equal split of the round budget (§4.4)
+        quota = max(
+            2, int(fl.participants_per_round * fl.overcommit / len(leaves))
+        )
+        B = self.width
+        slot_rows = np.zeros(B, np.int32)
+        client_rows = np.zeros(B, np.int32)
+        real = np.zeros(B, bool)
+        kept = np.zeros(B, bool)
+        claim_rows = np.zeros(B, bool)
+        update_slots = np.zeros(self.bank.capacity, bool)
+        durations: Dict[str, float] = {}
+        active: List[str] = []
+        pos = 0
+        for li, leaf in enumerate(leaves):
+            cand = avail[want == li]
+            if cand.size < 2:
+                continue
+            ccl = claimed[want == li]
+            take = min(quota, cand.size)
+            sel = eng.rng.choice(cand.size, size=take, replace=False)
+            part = cand[sel]
+            # over-commitment straggler drop: latency is a pure function of
+            # device speeds, so the kept set is known before execution
+            kept_ids, duration = eng.speeds.round_duration(
+                part.tolist(),
+                [fl.local_steps * fl.batch_size] * take,
+                overcommit=fl.overcommit,
+            )
+            rows = slice(pos, pos + take)
+            slot_rows[rows] = slots[li]
+            client_rows[rows] = part
+            real[rows] = True
+            kept[rows] = np.isin(part, np.asarray(kept_ids))
+            claim_rows[rows] = ccl[sel]
+            update_slots[slots[li]] = True
+            durations[leaf] = duration
+            active.append(leaf)
+            pos += take
+        if pos == 0:
+            return None
+        # padding rows replicate row 0 (weight 0, never kept)
+        slot_rows[pos:] = slot_rows[0]
+        client_rows[pos:] = client_rows[0]
+        sizes = np.array(
+            [len(eng.pop.clients[c].y) for c in client_rows], np.float32
+        )
+        return MatchPlan(
+            round_idx=r,
+            leaves=leaves,
+            active=active,
+            slot_rows=slot_rows,
+            client_rows=client_rows,
+            real=real,
+            kept=kept,
+            claimed=claim_rows,
+            sizes=sizes,
+            update_slots=update_slots,
+            durations=durations,
+            key_seed=int(eng.rng.integers(2**31)),
+        )
+
+    def _match_vectorized(self, r, avail, leaves, slots):
+        """①-matching without a per-client loop.
+
+        Returns (want — index into `leaves` per available client, claimed —
+        whether the choice equals the client's preferred cohort).
+        """
+        eng, auxo = self.eng, self.eng.auxo
+        nA = avail.size
+        eps = eng.selector.epsilon(r)
+        u = eng.rng.random(nA)
+        rand_pick = eng.rng.integers(len(leaves), size=nA)
+
+        known = self.table.known[avail][:, slots]  # (nA, L)
+        rew = np.where(known, self.table.reward[avail][:, slots], -np.inf)
+        known_any = known.any(1)
+        rand_draw = (~known_any) | (u < eps)
+
+        # persistently-negative clients: forced exploration + optional
+        # fingerprint decay (fresh rounds re-dominate the EMA)
+        forced = eng.neg_streak[avail] >= auxo.neg_streak_explore
+        if forced.any():
+            if auxo.fp_decay_on_streak < 1.0:
+                eng.fingerprint[avail[forced]] *= auxo.fp_decay_on_streak
+            eng.neg_streak[avail[forced]] = 0
+
+        exploit = np.argmax(rew, axis=1)
+        want = np.where(rand_draw | forced, rand_pick, exploit)
+        idx = np.arange(nA)
+        # a client is EXPLORING only if it holds no reward record for the
+        # cohort it picked — an ε-draw that lands on a known cohort (common
+        # once ExploreReward propagation has spread crumbs) still resolves
+        # by assisted matching below, exactly like the per-client engine
+        exploring = ~known[idx, want]
+        exploring |= forced
+        best_r = np.where(known[idx, want], rew[idx, want], 0.0)
+
+        # sticky-reward check (assisted matching): fingerprinted clients
+        # whose best reward is below the stick threshold request the ROOT
+        # and are placed by flat nearest-identity matching — ONE
+        # cosine-similarity call for the whole population
+        thresh = auxo.reward_stick if auxo.assisted_matching else 0.0
+        to_root = eng.fp_seen[avail] & (~exploring) & (best_r <= thresh)
+        if to_root.any():
+            ident_leaves = [l for l in leaves if l in eng.coordinator.identity]
+            if len(ident_leaves) >= 2:
+                idents = np.stack(
+                    [eng.coordinator.identity[l] for l in ident_leaves]
+                ).astype(np.float32)
+                fps = eng.fingerprint[avail[to_root]]
+                sims = np.asarray(
+                    kops.cosine_similarity(jnp.asarray(fps), jnp.asarray(idents))
+                )
+                li = np.array([leaves.index(l) for l in ident_leaves])
+                want[to_root] = li[np.argmax(sims, axis=1)]
+            else:
+                # identities not established yet: per-client prototype
+                # descent through the tree (rare — first rounds only)
+                for j in np.nonzero(to_root)[0]:
+                    c = int(avail[j])
+                    leaf = eng.coordinator.match_request(
+                        c,
+                        "0",
+                        int(self.table.cluster_idx[c, 0]),
+                        fingerprint=eng.fingerprint[c],
+                    )
+                    if leaf in leaves:
+                        want[j] = leaves.index(leaf)
+        claimed = known_any & (want == exploit)
+        return want, claimed
+
+    # ------------------------------------------------------------ stage ②
+    def _make_exec_step(self):
+        """Build the fused fixed-shape round step (compiled once).
+
+        (bank_params, bank_opt, slot_rows, xs, ys, keys, sizes, kept, upd)
+        -> (new_params, new_opt, sketches, losses); every leaf cohort's
+        local training, masked aggregation, and server-opt application in
+        one program.
+        """
+        eng, fl = self.eng, self.eng.fl
+        loss_fn = eng.task.loss
+        opt = eng.server_opt
+        C = self.bank.capacity
+        sketcher = eng.sketcher
+        qfed_q = fl.qfed_q
+
+        def step(bparams, bopt, slot_rows, xs, ys, keys, sizes, kept, upd):
+            # each flat row trains against ITS cohort's model (gather)
+            prow = jax.tree.map(lambda a: a[slot_rows], bparams)
+            deltas, losses = jax.vmap(
+                lambda p, x, y, k: local_train(
+                    loss_fn,
+                    p,
+                    x,
+                    y,
+                    k,
+                    lr=fl.lr,
+                    prox_mu=fl.prox_mu,
+                    dp_clip=fl.dp_clip,
+                    dp_sigma=fl.dp_sigma,
+                )
+            )(prow, xs, ys, keys)
+
+            # ③ masked per-cohort aggregation (q-FedAvg or size weighting)
+            if qfed_q > 0:
+                wr = jnp.power(jnp.maximum(losses, 1e-6), qfed_q)
+            else:
+                wr = sizes
+            wr = wr * kept
+            denom = jax.ops.segment_sum(wr, slot_rows, num_segments=C)
+            w = wr / jnp.maximum(denom[slot_rows], 1e-9)
+            agg = jax.tree.map(
+                lambda d: jax.ops.segment_sum(
+                    d * w.reshape((-1,) + (1,) * (d.ndim - 1)),
+                    slot_rows,
+                    num_segments=C,
+                ),
+                deltas,
+            )
+            new_p, new_o = apply_stacked(opt, bparams, bopt, agg, upd)
+            sketches = jax.vmap(sketcher)(deltas)
+            return new_p, new_o, sketches, losses
+
+        return jax.jit(step)
+
+    def _sample_rows(self, plan: MatchPlan):
+        """Host-side data plane: local batches for every real flat row."""
+        eng, fl = self.eng, self.eng.fl
+        n_rows = plan.slot_rows.shape[0]
+        xs = ys = None
+        last_real = 0
+        for i in range(n_rows):
+            if not plan.real[i]:
+                break
+            c = int(plan.client_rows[i])
+            x, y = eng.pop.sample_batch(c, fl.batch_size, fl.local_steps, eng.rng)
+            if c in eng.corrupted:
+                y = eng.rng.integers(0, eng.pop.n_classes, size=y.shape).astype(
+                    y.dtype
+                )
+            if xs is None:
+                xs = np.zeros((n_rows,) + x.shape, x.dtype)
+                ys = np.zeros((n_rows,) + y.shape, y.dtype)
+            xs[i], ys[i] = x, y
+            last_real = i
+        xs[last_real + 1 :] = xs[0]
+        ys[last_real + 1 :] = ys[0]
+        return xs, ys
+
+    def execute(self, plan: MatchPlan) -> ExecResult:
+        eng, fl = self.eng, self.eng.fl
+        xs, ys = self._sample_rows(plan)
+        keys = jax.random.split(jax.random.key(plan.key_seed), plan.slot_rows.shape[0])
+        if self.mode == "batched":
+            res = self._execute_batched(plan, xs, ys, keys)
+        else:
+            res = self._execute_sequential(plan, xs, ys, keys)
+        # simulated wall-clock + resource accounting
+        for leaf in plan.active:
+            slot = self.bank.slot_of[leaf]
+            self.bank.clock[slot] += plan.durations[leaf]
+            self.bank.rounds[slot] += 1
+        eng.resource_used += (
+            int(plan.real.sum()) * fl.local_steps * fl.batch_size
+        )
+        return res
+
+    def _execute_batched(self, plan, xs, ys, keys) -> ExecResult:
+        new_p, new_o, sketches, losses = self._exec_step(
+            self.bank.params,
+            self.bank.opt_state,
+            jnp.asarray(plan.slot_rows),
+            jnp.asarray(xs),
+            jnp.asarray(ys),
+            keys,
+            jnp.asarray(plan.sizes),
+            jnp.asarray(plan.kept.astype(np.float32)),
+            jnp.asarray(plan.update_slots),
+        )
+        self.exec_dispatches += 1
+        self.bank.params = new_p
+        self.bank.opt_state = new_o
+        return ExecResult(np.asarray(sketches), np.asarray(losses))
+
+    def _execute_sequential(self, plan, xs, ys, keys) -> ExecResult:
+        """Reference oracle: one padded device dispatch PER cohort, host
+        aggregation and eager server-opt application, like the seed engine."""
+        eng, fl = self.eng, self.eng.fl
+        B = plan.slot_rows.shape[0]
+        d_sketch = eng.auxo.d_sketch
+        sketches = np.zeros((B, d_sketch), np.float32)
+        losses = np.zeros((B,), np.float32)
+        quota = max(2, int(fl.participants_per_round * fl.overcommit / len(plan.leaves)))
+        for leaf in plan.active:
+            slot = self.bank.slot_of[leaf]
+            rows = np.nonzero(plan.real & (plan.slot_rows == slot))[0]
+            pad = np.concatenate([rows, np.repeat(rows[0], quota - rows.size)])
+            params = self.bank.params_of(leaf)
+            deltas, loss_c = eng._vmapped_train(
+                params, jnp.asarray(xs[pad]), jnp.asarray(ys[pad]), keys[pad]
+            )
+            self.exec_dispatches += 1
+            loss_np = np.asarray(loss_c)
+            if fl.qfed_q > 0:
+                w = np.power(np.maximum(loss_np, 1e-6), fl.qfed_q)
+            else:
+                w = plan.sizes[pad].astype(np.float32)
+            w = w * np.concatenate(
+                [plan.kept[rows], np.zeros(quota - rows.size)]
+            ).astype(np.float32)
+            w = jnp.asarray(w / max(w.sum(), 1e-9), jnp.float32)
+            agg = jax.tree.map(lambda d: jnp.tensordot(w, d, axes=1), deltas)
+            new_p, new_o = eng.server_opt.apply(
+                params, self.bank.opt_state_of(leaf), agg
+            )
+            si = jnp.asarray(slot)
+            self.bank.params = jax.tree.map(
+                lambda a, v: a.at[si].set(v), self.bank.params, new_p
+            )
+            self.bank.opt_state = jax.tree.map(
+                lambda a, v: a.at[si].set(v), self.bank.opt_state, new_o
+            )
+            if eng.auxo.enabled:
+                sk = np.asarray(eng._vmapped_sketch(deltas))
+                sketches[rows] = sk[: rows.size]
+            losses[rows] = loss_np[: rows.size]
+        return ExecResult(sketches, losses)
+
+    # ------------------------------------------------------------ stage ③
+    def apply_feedback(self, plan: MatchPlan, res: ExecResult):
+        eng, fl, auxo = self.eng, self.eng.fl, self.eng.auxo
+        if not auxo.enabled:
+            return
+        nact = len(plan.active)
+        if nact == 0:
+            return
+        B = plan.slot_rows.shape[0]
+        fp_batch = np.zeros((nact, B, auxo.d_sketch), np.float32)
+        masks = np.zeros((nact, B), np.float32)
+        kept_ids_list: List[np.ndarray] = []
+        claimed_list: List[np.ndarray] = []
+        for ci, leaf in enumerate(plan.active):
+            slot = self.bank.slot_of[leaf]
+            rows = np.nonzero(plan.kept & (plan.slot_rows == slot))[0]
+            kept_ids = plan.client_rows[rows]
+            sk_kept = res.sketches[rows]
+            # center against the cross-cohort GLOBAL mean (EMA'd in leaf
+            # order, like the per-cohort sequential updates), normalize, EMA
+            round_mu = sk_kept.mean(0)
+            if eng.global_mu_seen:
+                eng.global_mu = 0.8 * eng.global_mu + 0.2 * round_mu
+            else:
+                eng.global_mu, eng.global_mu_seen = round_mu.copy(), True
+            ctr = sk_kept - eng.global_mu[None, :]
+            ctr /= np.linalg.norm(ctr, axis=1, keepdims=True) + 1e-9
+            if fl.affinity_loss_rate > 0:
+                lose = eng.rng.random(kept_ids.size) < fl.affinity_loss_rate
+                eng.fingerprint[kept_ids[lose]] = 0.0
+                eng.fp_seen[kept_ids[lose]] = False
+            seen = eng.fp_seen[kept_ids]
+            eng.fingerprint[kept_ids] = np.where(
+                seen[:, None],
+                (1 - eng.fp_beta) * eng.fingerprint[kept_ids] + eng.fp_beta * ctr,
+                ctr,
+            )
+            eng.fp_seen[kept_ids] = True
+            fp_batch[ci, : kept_ids.size] = eng.fingerprint[kept_ids]
+            masks[ci, : kept_ids.size] = 1.0
+            kept_ids_list.append(kept_ids)
+            claimed_list.append(plan.claimed[rows])
+
+        results = eng.coordinator.feedback_all(
+            plan.active,
+            [k.tolist() for k in kept_ids_list],
+            jnp.asarray(fp_batch),
+            jnp.asarray(masks),
+            plan.round_idx,
+            fl.rounds,
+            claimed_list,
+            batched=(self.mode == "batched"),
+        )
+
+        # dense-table reward application + ExploreReward propagation;
+        # `cur` tracks the live leaf set so propagation targets match the
+        # cohort-by-cohort semantics of the sequential engine
+        cur = list(plan.leaves)
+        dists = distance_matrix(cur)
+        gamma = auxo.gamma
+        for fb in results:
+            ids = np.asarray(fb.client_ids, np.int64)
+            if ids.size == 0:
+                if fb.event is not None:
+                    self._apply_partition(fb.event, cur)
+                continue
+            neg = fb.delta < 0
+            eng.neg_streak[ids[neg]] += 1
+            eng.neg_streak[ids[~neg]] = 0
+            if fl.affinity_loss_rate > 0:
+                lose = eng.rng.random(ids.size) < fl.affinity_loss_rate
+            else:
+                lose = np.zeros(ids.size, bool)
+            if lose.any():
+                self.table.wipe(ids[lose])  # unstable client restarts exploring
+            ok = ~lose
+            slot = self.bank.slot_of[fb.cohort_id]
+            self.table.feedback(ids[ok], slot, fb.delta[ok], gamma)
+            self.table.set_cluster(ids[ok], slot, fb.assign[ok])
+            src = cur.index(fb.cohort_id)
+            slot_dist = {
+                self.bank.slot_of[o]: int(dists[src, j])
+                for j, o in enumerate(cur)
+                if o != fb.cohort_id
+            }
+            self.table.propagate(ids[ok], fb.delta[ok], slot_dist)
+            if fb.event is not None:
+                self._apply_partition(fb.event, cur)
+                dists = distance_matrix(cur)
+
+    def _apply_partition(self, event, cur: List[str]):
+        child_slots = self.bank.spawn_children(event.parent, event.children)
+        self.table.seed_children(self.bank.slot_of[event.parent], child_slots)
+        i = cur.index(event.parent)
+        cur[i : i + 1] = list(event.children)
+
+    # ------------------------------------------------------------ driver
+    def run_round(self, r: int):
+        plan = self.plan_round(r)
+        if plan is None:
+            return
+        res = self.execute(plan)
+        self.apply_feedback(plan, res)

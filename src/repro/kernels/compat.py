@@ -1,0 +1,16 @@
+"""Version compatibility for jax.experimental.pallas.tpu.
+
+jax renamed the TPU kernel compiler-params dataclass across releases:
+older releases (e.g. 0.4.37) expose ``TPUCompilerParams``, newer ones
+``CompilerParams``. Resolve whichever exists once, here, so the kernels
+stay import-clean on every jax the container ships.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams"
+)
+
+__all__ = ["CompilerParams"]

@@ -35,7 +35,16 @@ def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
 def cosine_similarity(
     x: jnp.ndarray, c: jnp.ndarray, block_p: int = 128, block_d: int = 512
 ) -> jnp.ndarray:
-    """x: (P, D), c: (K, D) -> (P, K) cosine sims. Pads to tile multiples."""
+    """x: (P, D), c: (K, D) -> (P, K) cosine sims. Pads to tile multiples.
+
+    Leading batch axis: x (C, P, D) with c (C, K, D) -> (C, P, K); the
+    kernel is vmapped over the cohort axis (Pallas turns the batch axis
+    into an extra grid dimension, so it stays one dispatch).
+    """
+    if x.ndim == 3:
+        return jax.vmap(
+            lambda xi, ci: cosine_similarity(xi, ci, block_p, block_d)
+        )(x, c)
     P, D = x.shape
     K = c.shape[0]
     bp = min(block_p, max(8, P))
@@ -58,7 +67,23 @@ def segment_aggregate(
     block_p: int = 256,
     block_d: int = 512,
 ) -> jnp.ndarray:
-    """data: (P, D); ids: (P,) -> (K, D) weighted segment sums."""
+    """data: (P, D); ids: (P,) -> (K, D) weighted segment sums.
+
+    Leading batch axis: data (C, P, D) with ids (C, P) (and optional
+    weights (C, P)) -> (C, K, D), one dispatch via vmap.
+    """
+    if data.ndim == 3:
+        if weights is None:
+            return jax.vmap(
+                lambda d, i: segment_aggregate(
+                    d, i, num_segments, None, block_p, block_d
+                )
+            )(data, segment_ids)
+        return jax.vmap(
+            lambda d, i, w: segment_aggregate(
+                d, i, num_segments, w, block_p, block_d
+            )
+        )(data, segment_ids, weights)
     P, D = data.shape
     bp = min(block_p, max(8, P))
     bd = min(block_d, max(128, D))

@@ -235,7 +235,22 @@ def make_central_train_step(model: Model, step_cfg: StepConfig, n_clients: int =
         sketches = pooled @ proj / jnp.sqrt(jnp.float32(cfg.d_model))
         clust_state, cmetrics = clustering_update(clust_state, sketches)
 
-        neg = tree_scale(grads, -1.0)  # pseudo-delta: one descent direction
+        # pseudo-delta scale policy: the server optimizer is tuned for
+        # federated client deltas (clipped local-SGD updates, norm ≲
+        # client_lr · clip_norm); feeding it the RAW loss gradient (norm
+        # ~1e2 here) made every YoGi step an lr-sized sign jump and the
+        # loss climbed. Clip like the client path, then scale by the
+        # client lr — the pseudo-delta of one local SGD step.
+        if step_cfg.clip_norm > 0:
+            gn = jnp.sqrt(
+                sum(
+                    jnp.sum(jnp.square(g.astype(jnp.float32)))
+                    for g in jax.tree.leaves(grads)
+                )
+            )
+            scale = jnp.minimum(1.0, step_cfg.clip_norm / jnp.maximum(gn, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+        neg = tree_scale(grads, -step_cfg.client_lr)
         params, opt_state = yogi_apply(params, opt_state, neg, lr=step_cfg.server_lr)
         metrics = {
             "loss": loss,

@@ -104,6 +104,51 @@ def test_checkpoint_recover_roundtrip(tmp_path):
     assert 42 in co2.blacklist
 
 
+def test_feedback_all_matches_per_cohort_feedback():
+    """Batched ④-feedback == sequential feedback() calls, cohort by cohort."""
+    rng = np.random.default_rng(7)
+
+    def partitioned():
+        co = _coordinator()
+        co.tree.partition("0", 2)
+        from repro.core.clustering import OnlineClustering
+        from repro.core.coordinator import CohortStats
+
+        for ch in ("0.0", "0.1"):
+            co.clusterers[ch] = OnlineClustering(2, 16, seed=5)
+            co.stats[ch] = CohortStats()
+        return co
+
+    co_a, co_b = partitioned(), partitioned()
+    for r in range(6):
+        sks = [_two_group(rng, n=24) for _ in ("0.0", "0.1")]
+        ids = [list(range(24)), list(range(100, 124))]
+        msgs0, _ = co_a.feedback("0.0", ids[0], jnp.asarray(sks[0]), r, 40)
+        msgs1, _ = co_a.feedback("0.1", ids[1], jnp.asarray(sks[1]), r, 40)
+        out = co_b.feedback_all(
+            ["0.0", "0.1"],
+            ids,
+            jnp.asarray(np.stack(sks)),
+            jnp.ones((2, 24), np.float32),
+            r,
+            40,
+        )
+        seq = [[msgs0[i].reward for i in ids[0]], [msgs1[i].reward for i in ids[1]]]
+        seq_assign = [
+            [msgs0[i].cluster_index for i in ids[0]],
+            [msgs1[i].cluster_index for i in ids[1]],
+        ]
+        for c in range(2):
+            np.testing.assert_allclose(out[c].delta, seq[c], rtol=1e-5, atol=1e-5)
+            np.testing.assert_array_equal(out[c].assign, seq_assign[c])
+    for cid in ("0.0", "0.1"):
+        ca, cb = co_a.clusterers[cid].state, co_b.clusterers[cid].state
+        np.testing.assert_allclose(
+            np.asarray(ca.centroids), np.asarray(cb.centroids), rtol=1e-5, atol=1e-6
+        )
+        assert float(ca.dispersion) == pytest.approx(float(cb.dispersion), rel=1e-5)
+
+
 def test_soft_state_rebuild_from_requests():
     co = _coordinator()
     co.rebuild_from_requests([(1, "0.0", 0), (2, "0.1", 1), (3, "0.1.0", 0)])

@@ -1,6 +1,7 @@
 """Federated data pipeline tests."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # test extra; not in the base image
 from hypothesis import given, settings, strategies as st
 
 from repro.data import AvailabilityTrace, DeviceSpeeds, make_population

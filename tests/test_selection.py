@@ -1,6 +1,7 @@
 """Cohort selection, rewards, tree-distance properties."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # test extra; not in the base image
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp
