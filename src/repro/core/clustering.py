@@ -188,8 +188,33 @@ def stack_states(states: Sequence[ClusterState]) -> ClusterState:
 
 
 def unstack_states(stacked: ClusterState, n: int) -> list:
-    """Split a leading-C-axis ClusterState back into per-cohort states."""
-    return [jax.tree.map(lambda l: l[i], stacked) for i in range(n)]
+    """Split a leading-C-axis ClusterState back into per-cohort states.
+
+    Splits on the HOST (one device->host copy per leaf, then numpy views):
+    n per-cohort states x 8 leaves as eager device slices cost more than
+    the clustering math itself at C >= 32. The states are tiny; numpy
+    leaves re-enter jit transparently on the next dispatch.
+    """
+    host = jax.tree.map(np.asarray, stacked)
+    return [jax.tree.map(lambda l: l[i], host) for i in range(n)]
+
+
+@partial(jax.jit, static_argnames=("k", "iters", "restarts"))
+def kmeans_bootstrap_batched(
+    keys, sketches: jnp.ndarray, masks: jnp.ndarray, k: int, iters: int = 10,
+    restarts: int = 4
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Stacked once-per-cohort k-means bootstrap: ONE vmapped dispatch.
+
+    Freshly-spawned cohorts used to pay a separate `kmeans_cosine` dispatch
+    each inside `feedback_all` (k dispatches after every partition). This
+    stacks the restart sweeps of all initializing cohorts along a leading
+    axis: keys (C,) per-cohort PRNG keys, sketches (C, P, d), masks (C, P)
+    -> (centroids (C, K, d), assignments (C, P)).
+    """
+    return jax.vmap(
+        lambda kk, sk, m: kmeans_cosine(kk, sk, k, iters, m, restarts)
+    )(keys, sketches, masks)
 
 
 @partial(jax.jit, static_argnames=("ema",))

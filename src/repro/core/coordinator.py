@@ -21,6 +21,7 @@ import numpy as np
 from repro.core.clustering import (
     OnlineClustering,
     assign_and_update_batched,
+    kmeans_bootstrap_batched,
     population_heterogeneity,
     stack_states,
     unstack_states,
@@ -28,6 +29,14 @@ from repro.core.clustering import (
 from repro.core.cohort import AffinityMessage, CohortTree
 from repro.core.criteria import PartitionCriteria
 from repro.core.selection import instant_reward, instant_reward_batched
+
+
+def _population_heterogeneity_np(sk: np.ndarray, m: np.ndarray) -> float:
+    """Numpy twin of clustering.population_heterogeneity for the host-side
+    per-cohort stats loop (a jit dispatch per cohort is pure overhead)."""
+    tot = max(float(m.sum()), 1.0)
+    mu = (sk * m[:, None]).sum(0) / tot
+    return float((m * ((sk - mu) ** 2).sum(-1)).sum() / tot)
 
 
 @dataclasses.dataclass
@@ -247,6 +256,11 @@ class CohortCoordinator:
         frac = round_idx / max(total_rounds, 1)
         cluster_on = frac >= self.clustering_start_frac
         P = int(sketches.shape[1])
+        # one host copy for the per-cohort numpy paths (identity refresh,
+        # heterogeneity stats) — per-cohort eager device slices add up at
+        # C = 32+
+        sk_host = np.asarray(sketches, np.float32)
+        mask_host = np.asarray(masks, np.float32)
         # cohorts with no valid participants are left completely untouched,
         # matching sequential feedback()'s n == 0 early return
         n_by = [len(ids) for ids in client_ids_list]
@@ -261,10 +275,37 @@ class CohortCoordinator:
             ready_idx = [
                 i for i in range(C) if n_by[i] > 0 and i not in set(init_idx)
             ]
-            # once-per-cohort-lifetime k-means bootstrap (per-cohort call)
-            for i in init_idx:
-                a, _ = self.clusterers[cohort_ids[i]].step(sketches[i], masks[i])
-                assigns[i] = a
+            # once-per-cohort-lifetime k-means bootstrap: one vmapped init
+            # for all cohorts bootstrapping this round (after a partition,
+            # all k children bootstrap together). Each cohort's own PRNG
+            # key stream is consumed exactly like a solo `step` call.
+            if batched and len(init_idx) > 1:
+                subs = []
+                for i in init_idx:
+                    cl = self.clusterers[cohort_ids[i]]
+                    cl._key, sub = jax.random.split(cl._key)
+                    subs.append(sub)
+                cents, a_init = kmeans_bootstrap_batched(
+                    jnp.stack(subs),
+                    jnp.asarray(sketches)[jnp.asarray(init_idx)],
+                    jnp.asarray(masks)[jnp.asarray(init_idx)].astype(jnp.float32),
+                    self.cluster_k,
+                )
+                a_init = np.asarray(a_init)
+                cents = np.asarray(cents)  # one host copy, not C slices
+                for j, i in enumerate(init_idx):
+                    cl = self.clusterers[cohort_ids[i]]
+                    cl.state = dataclasses.replace(
+                        cl.state,
+                        centroids=cents[j],
+                        initialized=jnp.ones((), bool),
+                        round=cl.state.round + 1,
+                    )
+                    assigns[i] = a_init[j]
+            else:
+                for i in init_idx:
+                    a, _ = self.clusterers[cohort_ids[i]].step(sketches[i], masks[i])
+                    assigns[i] = a
             # every initialized cohort: ONE vmapped assign+EMA-refresh
             # dispatch (batched), or the legacy per-cohort host calls
             if ready_idx and batched:
@@ -315,12 +356,11 @@ class CohortCoordinator:
             st.initial_participants = max(st.initial_participants, float(n))
             if cluster_on and st.rounds_trained <= 3:
                 st.initial_heterogeneity = float(
-                    population_heterogeneity(sketches[i], masks[i])
+                    _population_heterogeneity_np(sk_host[i], mask_host[i])
                 )
 
             # refresh this leaf's identity vector from member fingerprints
-            sk_np = np.asarray(sketches[i][:n], np.float32)
-            ident = sk_np.mean(0)
+            ident = sk_host[i, :n].mean(0)
             if cid in self.identity:
                 self.identity[cid] = 0.8 * self.identity[cid] + 0.2 * ident
             else:

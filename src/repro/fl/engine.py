@@ -64,6 +64,23 @@ class FLConfig:
     # execution mode: "batched" = one fused device step per round (default);
     # "sequential" = per-cohort dispatches (reference oracle)
     execution: str = "batched"
+    # cohort-parallel placement (ARCHITECTURE.md §④): shard the CohortBank
+    # slot axis (and the flat row axis) over a `cohort` mesh of this many
+    # devices. 0/1 = single-device; >1 requires execution="batched" and at
+    # least that many jax devices. Raises the practical cohort ceiling from
+    # C ≈ 8 on one chip to C = 64 across a mesh (bank memory scales 1/S).
+    cohort_shards: int = 0
+    # rows each shard owns in the fused step; 0 = auto (2·width/S, the
+    # balanced share with 2x skew slack). A cohort whose shard block fills
+    # trains with fewer participants that round (per-device participant
+    # capacity; counted in RoundPipeline.dropped_rows). Set to
+    # int(participants_per_round·overcommit) for strict single-device
+    # participant semantics at the cost of more padded rows.
+    rows_per_shard: int = 0
+    # cross-cohort membership policy: by default a client id may hold at
+    # most ONE kept row per round (asserted in MatchPlan); opt in to
+    # multi-cohort membership explicitly before writing such a policy.
+    allow_cross_cohort_duplicates: bool = False
     # resilience knobs (§7.5)
     corrupt_frac: float = 0.0
     dp_clip: float = 0.0
@@ -76,6 +93,10 @@ class AuxoConfig:
     enabled: bool = True
     d_sketch: int = 64
     cluster_k: int = 2
+    # leaf-cohort ceiling. The engine supports up to C = 64 (capacity 127
+    # bank slots with k = 2): single-device for small models, or sharded
+    # over a cohort mesh via FLConfig.cohort_shards for anything bigger —
+    # see benchmarks/cohort_scaling.py for the C = 8..64 sweep.
     max_cohorts: int = 8
     gamma: float = 0.2
     epsilon0: float = 0.8

@@ -37,6 +37,18 @@ feedback, but executes one device dispatch per cohort exactly like the
 seed engine — equivalence tests check both modes produce the same models,
 and benchmarks/round_latency.py measures the speedup.
 
+PLACEMENT (ARCHITECTURE.md §④): with ``FLConfig.cohort_shards = S > 1`` the
+CohortBank's slot axis shards over a ``cohort`` device mesh
+(launch/mesh.make_cohort_mesh + launch/sharding.bank_shardings) and the
+flat row axis becomes S blocks of ``shard_width`` rows, block j packed with
+participants of the cohorts whose slots live on device j. The fused step
+runs under ``shard_map`` with NO collectives: each device gathers, trains,
+segment-sums, and server-opts only its own slots; only per-row sketches and
+losses (d_sketch + 1 floats per participant) return to the host. Partitions
+stay a device-side scatter (slot placement preserved), shapes stay fixed —
+the compile-once and one-dispatch-per-round invariants survive sharding.
+benchmarks/cohort_scaling.py sweeps C = 8..64 single-device vs sharded.
+
 Semantic deltas vs the seed engine (documented, benign):
 - client affinity lives in dense tables over *leaf slots*; stale non-leaf
   cohort ids no longer accumulate reward crumbs (the coordinator previously
@@ -49,16 +61,27 @@ Semantic deltas vs the seed engine (documented, benign):
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.cohort import distance_matrix
 from repro.fl.algorithms import apply_stacked
 from repro.fl.client import local_train
 from repro.kernels import ops as kops
+from repro.launch.mesh import cohort_size, make_cohort_mesh
+from repro.launch.sharding import bank_shardings, row_sharding
+
+
+def _next_pow2(n: int) -> int:
+    """Smallest power of two >= n (n >= 1). Used to bucket data-dependent
+    batch widths so jit caches stay small instead of recompiling per round."""
+    return 1 << max(0, int(n) - 1).bit_length()
 
 
 # ---------------------------------------------------------------------------
@@ -71,22 +94,79 @@ class CohortBank:
     Partitions copy the parent slot into freshly allocated child slots
     (device-side scatter) — array shapes never change, so the fused round
     step compiles exactly once.
+
+    PLACEMENT: with a ``cohort`` mesh the slot axis shards across devices
+    (``launch/sharding.bank_shardings``): capacity is padded to a multiple
+    of the shard count, device j owns the contiguous slot block
+    [j*slots_per_shard, (j+1)*slots_per_shard), and each model leaf is
+    replicated (``dp``) or tp-sharded within its slot. Slot ALLOCATION is
+    round-robin across shards (allocation n -> slot
+    (n % S)*slots_per_shard + n//S) so live leaf cohorts spread evenly over
+    devices as the tree partitions. ``spawn_children`` stays a device-side
+    scatter (jitted, donated, sharding-preserving): the parent slot crosses
+    the mesh once per partition — the only time model bytes move between
+    devices.
     """
 
-    def __init__(self, params, opt_state, capacity: int):
-        self.capacity = capacity
-        self.params = jax.tree.map(
-            lambda a: jnp.zeros((capacity,) + a.shape, a.dtype).at[0].set(a), params
-        )
-        self.opt_state = jax.tree.map(
-            lambda a: jnp.zeros((capacity,) + a.shape, a.dtype).at[0].set(a),
-            opt_state,
-        )
+    def __init__(self, params, opt_state, capacity: int, mesh=None, policy: str = "dp"):
+        self.mesh = mesh
+        self.n_shards = cohort_size(mesh) if mesh is not None else 1
+        # pad capacity so every device owns an equal slot block
+        self.capacity = -(-capacity // self.n_shards) * self.n_shards
+        self.slots_per_shard = self.capacity // self.n_shards
+        cap = self.capacity
+
+        def stack(tree):
+            shapes = jax.eval_shape(
+                lambda t: jax.tree.map(
+                    lambda a: jnp.zeros((cap,) + a.shape, a.dtype), t
+                ),
+                tree,
+            )
+            shardings = (
+                bank_shardings(shapes, mesh, policy) if mesh is not None else None
+            )
+
+            def one(a, sh):
+                f = jax.jit(
+                    lambda x: jnp.zeros((cap,) + x.shape, x.dtype).at[0].set(x),
+                    out_shardings=sh,
+                )
+                return f(a)
+
+            if shardings is None:
+                return jax.tree.map(lambda a: one(a, None), tree), None
+            return jax.tree.map(one, tree, shardings), shardings
+
+        self.params, self._params_sh = stack(params)
+        self.opt_state, self._opt_sh = stack(opt_state)
         self.slot_of: Dict[str, int] = {"0": 0}
         self.id_of: Dict[int, str] = {0: "0"}
-        self.clock = np.zeros(capacity, np.float64)
-        self.rounds = np.zeros(capacity, np.int64)
-        self._next = 1
+        self.clock = np.zeros(self.capacity, np.float64)
+        self.rounds = np.zeros(self.capacity, np.int64)
+        self._next = 1  # number of allocated slots (allocation counter)
+        # device-side warm-start scatter. out_shardings PINS the bank's
+        # placement: without it the scatter's output layout can drift from
+        # the construction-time sharding, which would silently retrace the
+        # fused round step after the first partition (breaking the
+        # compile-once invariant). Donation would make it single-copy on
+        # TPU, but CPU — the test substrate — warns on every donated call.
+        def scatter_fn(t, ii, ps):
+            return jax.tree.map(lambda a: a.at[ii].set(a[ps]), t)
+
+        self._scatter_params = jax.jit(scatter_fn, out_shardings=self._params_sh)
+        self._scatter_opt = jax.jit(scatter_fn, out_shardings=self._opt_sh)
+
+    def shard_of(self, slot: int) -> int:
+        """Mesh position (cohort-axis index) of the device owning `slot`."""
+        return slot // self.slots_per_shard
+
+    def _alloc_slot(self, n: int) -> int:
+        """Slot id of the n-th allocation: round-robin across shard blocks
+        so concurrently-live cohorts land on different devices."""
+        if self.n_shards == 1:
+            return n
+        return (n % self.n_shards) * self.slots_per_shard + n // self.n_shards
 
     def params_of(self, cohort_id: str):
         i = self.slot_of[cohort_id]
@@ -105,13 +185,15 @@ class CohortBank:
                 raise RuntimeError(
                     f"CohortBank capacity {self.capacity} exhausted at {ch}"
                 )
-            self.slot_of[ch] = self._next
-            self.id_of[self._next] = ch
-            idx.append(self._next)
+            slot = self._alloc_slot(self._next)
+            self.slot_of[ch] = slot
+            self.id_of[slot] = ch
+            idx.append(slot)
             self._next += 1
         ii = jnp.asarray(idx)
-        self.params = jax.tree.map(lambda a: a.at[ii].set(a[ps]), self.params)
-        self.opt_state = jax.tree.map(lambda a: a.at[ii].set(a[ps]), self.opt_state)
+        psa = jnp.asarray(ps)
+        self.params = self._scatter_params(self.params, ii, psa)
+        self.opt_state = self._scatter_opt(self.opt_state, ii, psa)
         self.clock[idx] = self.clock[ps]
         self.rounds[idx] = self.rounds[ps]
         return idx
@@ -151,10 +233,17 @@ class AffinityTable:
         self.cluster_idx[cids[has], slot] = assign[has]
 
     def propagate(self, cids: np.ndarray, delta: np.ndarray, slot_dist: Dict[int, int]):
-        """ExploreReward (§4.3): push ΔR/(d+1) to the other leaves."""
-        for other_slot, d in slot_dist.items():
-            self.reward[cids, other_slot] += delta / (d + 1)
-            self.known[cids, other_slot] = True
+        """ExploreReward (§4.3): push ΔR/(d+1) to the other leaves.
+
+        One fancy-indexed block update over (clients x other-leaves) — the
+        per-slot loop this replaces made stage ③ O(L²) per round.
+        """
+        if not slot_dist or cids.size == 0:
+            return
+        slots = np.fromiter(slot_dist.keys(), np.int64, len(slot_dist))
+        dists = np.fromiter(slot_dist.values(), np.float64, len(slot_dist))
+        self.reward[np.ix_(cids, slots)] += delta[:, None] / (dists[None, :] + 1)
+        self.known[np.ix_(cids, slots)] = True
 
     def seed_children(self, parent_slot: int, child_slots: List[int]):
         """Algorithm 1 line 22: child rewards R + 0.1·1(L == k)."""
@@ -174,12 +263,40 @@ class AffinityTable:
         return int(slots[int(np.argmax(masked))])
 
 
+def check_cross_cohort_unique(client_rows: np.ndarray, kept: np.ndarray):
+    """Assert no client id occupies two kept rows in one round.
+
+    The vectorized matcher assigns every client exactly one leaf, so this
+    cannot fire today — it guards future matching policies (e.g. multi-
+    cohort membership experiments) against silently double-counting a
+    client's update. Opt out explicitly with
+    ``FLConfig.allow_cross_cohort_duplicates = True``.
+    """
+    ids = client_rows[kept]
+    uniq, counts = np.unique(ids, return_counts=True)
+    dup = uniq[counts > 1]
+    if dup.size:
+        raise ValueError(
+            f"client id(s) {dup[:8].tolist()} hold kept rows in more than one "
+            "cohort this round; set FLConfig.allow_cross_cohort_duplicates=True "
+            "to permit multi-cohort membership explicitly"
+        )
+
+
 # ---------------------------------------------------------------------------
 # Stage outputs
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
 class MatchPlan:
-    """Stage-① output: the round's flat, fixed-width execution layout."""
+    """Stage-① output: the round's flat, fixed-width execution layout.
+
+    B = n_shards * shard_width; under sharding, rows [j*W, (j+1)*W) are
+    block j and hold only participants of cohorts placed on device j (plus
+    padding), so the execution stage needs no cross-device gathers. `order`
+    records the layout-independent canonical fill order (leaf by leaf, in
+    tree order): host-side data sampling and per-row PRNG keys follow it,
+    which keeps sharded and single-device runs drawing identical streams.
+    """
 
     round_idx: int
     leaves: List[str]  # all leaf cohorts, tree order
@@ -193,6 +310,9 @@ class MatchPlan:
     update_slots: np.ndarray  # (capacity,) bool — slots that train this round
     durations: Dict[str, float]
     key_seed: int
+    order: np.ndarray  # (B,) int32 — canonical row order; first n_real real
+    n_real: int  # real participant rows this round
+    dropped: int  # participants dropped to a full shard row block (§④)
 
 
 @dataclasses.dataclass
@@ -216,6 +336,11 @@ class RoundPipeline:
                        application, but per-cohort device dispatches like
                        the seed engine (used by equivalence tests and the
                        round-latency benchmark baseline).
+
+    With ``FLConfig.cohort_shards = S > 1`` (batched mode only) the bank and
+    the flat row axis shard over an S-device ``cohort`` mesh and the fused
+    step runs under shard_map with no collectives — see the module
+    docstring and ARCHITECTURE.md §④.
     """
 
     def __init__(self, engine, mode: str = "batched"):
@@ -234,17 +359,40 @@ class RoundPipeline:
         else:
             capacity = 1
             self.max_leaves = 1
+        self.n_shards = max(1, int(fl.cohort_shards or 1))
+        if self.n_shards > 1:
+            assert mode == "batched", "cohort sharding requires the batched pipeline"
+            self.mesh = make_cohort_mesh(self.n_shards)
+        else:
+            self.mesh = None
         self.bank = CohortBank(
-            engine._init_params, engine.server_opt.init(engine._init_params), capacity
+            engine._init_params,
+            engine.server_opt.init(engine._init_params),
+            capacity,
+            mesh=self.mesh,
         )
-        self.table = AffinityTable(engine.pop.n_clients, capacity)
+        self.table = AffinityTable(engine.pop.n_clients, self.bank.capacity)
         # flat execution width: the full round budget, fixed for the run.
         # L·quota(L) ≤ max(int(P·oc), 2·L) for every leaf count L, so this
         # width fits every partition state without a reshape.
         self.width = max(
             2, int(fl.participants_per_round * fl.overcommit), 2 * self.max_leaves
         )
+        # per-device row block (§④): each shard owns `shard_width` rows for
+        # the cohorts placed on it. The default (2·width/S, i.e. 2x the
+        # balanced share) absorbs leaf-placement skew; a cohort whose block
+        # fills trains with fewer participants that round (counted in
+        # MatchPlan.dropped) — the per-device participant *capacity*
+        # semantic. rows_per_shard=width restores strict single-device
+        # semantics at the cost of S·width padded rows.
+        if self.n_shards == 1:
+            self.shard_width = self.width
+        else:
+            auto = min(self.width, max(2, -(-2 * self.width // self.n_shards)))
+            self.shard_width = int(fl.rows_per_shard or auto)
+        self.exec_width = self.shard_width * self.n_shards
         self.exec_dispatches = 0  # device dispatches issued by stage ② so far
+        self.dropped_rows = 0  # participants dropped to full shard blocks
         self._exec_step = self._make_exec_step()
 
     # ------------------------------------------------------------ stage ①
@@ -277,7 +425,8 @@ class RoundPipeline:
         quota = max(
             2, int(fl.participants_per_round * fl.overcommit / len(leaves))
         )
-        B = self.width
+        B = self.exec_width
+        W = self.shard_width
         slot_rows = np.zeros(B, np.int32)
         client_rows = np.zeros(B, np.int32)
         real = np.zeros(B, bool)
@@ -286,13 +435,25 @@ class RoundPipeline:
         update_slots = np.zeros(self.bank.capacity, bool)
         durations: Dict[str, float] = {}
         active: List[str] = []
-        pos = 0
+        cursors = np.zeros(self.n_shards, np.int64)  # fill level per block
+        order_list: List[int] = []  # canonical (layout-independent) order
+        dropped = 0
         for li, leaf in enumerate(leaves):
             cand = avail[want == li]
             if cand.size < 2:
                 continue
             ccl = claimed[want == li]
             take = min(quota, cand.size)
+            # §④ per-device participant capacity: a cohort trains with at
+            # most the free rows of its slot's shard block
+            shard = self.bank.shard_of(int(slots[li]))
+            space = int(W - cursors[shard])
+            if take > space:
+                dropped += take - space
+                take = space
+            if take < 2:
+                dropped += take
+                continue
             sel = eng.rng.choice(cand.size, size=take, replace=False)
             part = cand[sel]
             # over-commitment straggler drop: latency is a pure function of
@@ -302,7 +463,8 @@ class RoundPipeline:
                 [fl.local_steps * fl.batch_size] * take,
                 overcommit=fl.overcommit,
             )
-            rows = slice(pos, pos + take)
+            base = shard * W + int(cursors[shard])
+            rows = slice(base, base + take)
             slot_rows[rows] = slots[li]
             client_rows[rows] = part
             real[rows] = True
@@ -311,12 +473,30 @@ class RoundPipeline:
             update_slots[slots[li]] = True
             durations[leaf] = duration
             active.append(leaf)
-            pos += take
-        if pos == 0:
+            cursors[shard] += take
+            order_list.extend(range(rows.start, rows.stop))
+        n_real = len(order_list)
+        if n_real == 0:
             return None
-        # padding rows replicate row 0 (weight 0, never kept)
-        slot_rows[pos:] = slot_rows[0]
-        client_rows[pos:] = client_rows[0]
+        # padding rows replicate their block's first row (weight 0, never
+        # kept); an EMPTY block pads with its shard's first local slot so
+        # the per-row param gather still never crosses the mesh
+        first_real = order_list[0]
+        for j in range(self.n_shards):
+            lo, hi = j * W + int(cursors[j]), (j + 1) * W
+            if lo == hi:
+                continue
+            src = j * W if cursors[j] > 0 else first_real
+            slot_rows[lo:hi] = (
+                slot_rows[src] if cursors[j] > 0 else j * self.bank.slots_per_shard
+            )
+            client_rows[lo:hi] = client_rows[src]
+        order = np.concatenate(
+            [np.asarray(order_list, np.int64), np.flatnonzero(~real)]
+        ).astype(np.int32)
+        if not fl.allow_cross_cohort_duplicates:
+            check_cross_cohort_unique(client_rows, kept)
+        self.dropped_rows += dropped
         sizes = np.array(
             [len(eng.pop.clients[c].y) for c in client_rows], np.float32
         )
@@ -333,6 +513,9 @@ class RoundPipeline:
             update_slots=update_slots,
             durations=durations,
             key_seed=int(eng.rng.integers(2**31)),
+            order=order,
+            n_real=n_real,
+            dropped=dropped,
         )
 
     def _match_vectorized(self, r, avail, leaves, slots):
@@ -384,9 +567,18 @@ class RoundPipeline:
                     [eng.coordinator.identity[l] for l in ident_leaves]
                 ).astype(np.float32)
                 fps = eng.fingerprint[avail[to_root]]
+                # pad the fingerprint batch to a power-of-two bucket (floor
+                # 512): the raw to_root count varies every round and would
+                # recompile the cosine kernel each time (measured: the
+                # dominant stage-① cost at C = 32); the floor keeps steady
+                # state at ONE compiled size — the padded rows are zeros
+                # and the extra compute is trivial
+                n = fps.shape[0]
+                fpad = np.zeros((max(512, _next_pow2(n)), fps.shape[1]), np.float32)
+                fpad[:n] = fps
                 sims = np.asarray(
-                    kops.cosine_similarity(jnp.asarray(fps), jnp.asarray(idents))
-                )
+                    kops.cosine_similarity(jnp.asarray(fpad), jnp.asarray(idents))
+                )[:n]
                 li = np.array([leaves.index(l) for l in ident_leaves])
                 want[to_root] = li[np.argmax(sims, axis=1)]
             else:
@@ -409,19 +601,28 @@ class RoundPipeline:
     def _make_exec_step(self):
         """Build the fused fixed-shape round step (compiled once).
 
-        (bank_params, bank_opt, slot_rows, xs, ys, keys, sizes, kept, upd)
-        -> (new_params, new_opt, sketches, losses); every leaf cohort's
-        local training, masked aggregation, and server-opt application in
-        one program.
+        (bank_params, bank_opt, slot_rows, xs, ys, key_data, sizes, kept,
+        upd) -> (new_params, new_opt, sketches, losses); every leaf
+        cohort's local training, masked aggregation, and server-opt
+        application in one program. ``slot_rows`` are bank slot ids —
+        global on one device, shard-local under the cohort mesh.
+
+        Sharded (n_shards > 1): the same body runs under ``shard_map`` —
+        each device sees its (slots_per_shard, ...) bank block and its
+        shard_width row block, whose slot ids were made block-local by the
+        MatchPlan packing. The program contains NO collectives: gather,
+        training, the masked segment-sum aggregation, and the server
+        optimizer all stay on the slot's device; only sketches and losses
+        (returned row-sharded, fetched by stage ③) leave it.
         """
         eng, fl = self.eng, self.eng.fl
         loss_fn = eng.task.loss
         opt = eng.server_opt
-        C = self.bank.capacity
         sketcher = eng.sketcher
         qfed_q = fl.qfed_q
 
-        def step(bparams, bopt, slot_rows, xs, ys, keys, sizes, kept, upd):
+        def step(bparams, bopt, slot_rows, xs, ys, kd, sizes, kept, upd, *, nseg):
+            keys = jax.random.wrap_key_data(kd)
             # each flat row trains against ITS cohort's model (gather)
             prow = jax.tree.map(lambda a: a[slot_rows], bparams)
             deltas, losses = jax.vmap(
@@ -444,13 +645,13 @@ class RoundPipeline:
             else:
                 wr = sizes
             wr = wr * kept
-            denom = jax.ops.segment_sum(wr, slot_rows, num_segments=C)
+            denom = jax.ops.segment_sum(wr, slot_rows, num_segments=nseg)
             w = wr / jnp.maximum(denom[slot_rows], 1e-9)
             agg = jax.tree.map(
                 lambda d: jax.ops.segment_sum(
                     d * w.reshape((-1,) + (1,) * (d.ndim - 1)),
                     slot_rows,
-                    num_segments=C,
+                    num_segments=nseg,
                 ),
                 deltas,
             )
@@ -458,17 +659,29 @@ class RoundPipeline:
             sketches = jax.vmap(sketcher)(deltas)
             return new_p, new_o, sketches, losses
 
-        return jax.jit(step)
+        if self.n_shards == 1:
+            return jax.jit(partial(step, nseg=self.bank.capacity))
+        spec = P("cohort")
+        local = shard_map(
+            partial(step, nseg=self.bank.slots_per_shard),
+            mesh=self.mesh,
+            in_specs=(spec,) * 9,
+            out_specs=(spec,) * 4,
+            check_rep=False,
+        )
+        return jax.jit(local)
 
     def _sample_rows(self, plan: MatchPlan):
-        """Host-side data plane: local batches for every real flat row."""
+        """Host-side data plane: local batches for every real flat row.
+
+        Rows are visited in the plan's canonical order (leaf by leaf) so
+        the host RNG stream is identical for every shard layout; padding
+        rows replicate the first real row's batch (they carry weight 0).
+        """
         eng, fl = self.eng, self.eng.fl
         n_rows = plan.slot_rows.shape[0]
         xs = ys = None
-        last_real = 0
-        for i in range(n_rows):
-            if not plan.real[i]:
-                break
+        for i in plan.order[: plan.n_real]:
             c = int(plan.client_rows[i])
             x, y = eng.pop.sample_batch(c, fl.batch_size, fl.local_steps, eng.rng)
             if c in eng.corrupted:
@@ -479,18 +692,27 @@ class RoundPipeline:
                 xs = np.zeros((n_rows,) + x.shape, x.dtype)
                 ys = np.zeros((n_rows,) + y.shape, y.dtype)
             xs[i], ys[i] = x, y
-            last_real = i
-        xs[last_real + 1 :] = xs[0]
-        ys[last_real + 1 :] = ys[0]
+        pad = plan.order[plan.n_real :]
+        src = int(plan.order[0])
+        xs[pad] = xs[src]
+        ys[pad] = ys[src]
         return xs, ys
 
     def execute(self, plan: MatchPlan) -> ExecResult:
         eng, fl = self.eng, self.eng.fl
         xs, ys = self._sample_rows(plan)
-        keys = jax.random.split(jax.random.key(plan.key_seed), plan.slot_rows.shape[0])
+        B = plan.slot_rows.shape[0]
+        # per-row PRNG keys follow the canonical order too: the key of a
+        # participant depends on its (leaf, position) — not on which shard
+        # block the layout put its row in
+        base = jax.random.split(jax.random.key(plan.key_seed), B)
+        inv = np.empty(B, np.int64)
+        inv[plan.order] = np.arange(B)
+        kd = np.asarray(jax.random.key_data(base))[inv]
         if self.mode == "batched":
-            res = self._execute_batched(plan, xs, ys, keys)
+            res = self._execute_batched(plan, xs, ys, kd)
         else:
+            keys = jax.random.wrap_key_data(jnp.asarray(kd))
             res = self._execute_sequential(plan, xs, ys, keys)
         # simulated wall-clock + resource accounting
         for leaf in plan.active:
@@ -502,17 +724,34 @@ class RoundPipeline:
         )
         return res
 
-    def _execute_batched(self, plan, xs, ys, keys) -> ExecResult:
+    def _execute_batched(self, plan, xs, ys, kd) -> ExecResult:
+        slot_rows = plan.slot_rows
+        if self.n_shards > 1:
+            # shard-local slot ids: row block j only references slots owned
+            # by device j, so the in-step gather never crosses the mesh
+            B = slot_rows.shape[0]
+            shard_of_row = np.arange(B) // self.shard_width
+            slot_rows = slot_rows - (shard_of_row * self.bank.slots_per_shard).astype(
+                slot_rows.dtype
+            )
+            rsh = row_sharding(self.mesh)
+            ush = NamedSharding(self.mesh, P("cohort"))
+            put = lambda a: jax.device_put(np.asarray(a), rsh)  # noqa: E731
+        else:
+            put = jnp.asarray
+            ush = None
         new_p, new_o, sketches, losses = self._exec_step(
             self.bank.params,
             self.bank.opt_state,
-            jnp.asarray(plan.slot_rows),
-            jnp.asarray(xs),
-            jnp.asarray(ys),
-            keys,
-            jnp.asarray(plan.sizes),
-            jnp.asarray(plan.kept.astype(np.float32)),
-            jnp.asarray(plan.update_slots),
+            put(slot_rows),
+            put(xs),
+            put(ys),
+            put(kd),
+            put(plan.sizes),
+            put(plan.kept.astype(np.float32)),
+            jnp.asarray(plan.update_slots)
+            if ush is None
+            else jax.device_put(plan.update_slots, ush),
         )
         self.exec_dispatches += 1
         self.bank.params = new_p
@@ -571,14 +810,22 @@ class RoundPipeline:
         nact = len(plan.active)
         if nact == 0:
             return
-        B = plan.slot_rows.shape[0]
-        fp_batch = np.zeros((nact, B, auxo.d_sketch), np.float32)
-        masks = np.zeros((nact, B), np.float32)
+        rows_by = [
+            np.nonzero(plan.kept & (plan.slot_rows == self.bank.slot_of[leaf]))[0]
+            for leaf in plan.active
+        ]
+        # tight per-cohort batch width: pad to the power-of-two bucket of
+        # the round's largest kept set, NOT the full flat row width B — at
+        # C = 32 the old (nact, B, d) layout made stage ③'s clustering
+        # dispatch 30x larger than the data it carried (the dominant round
+        # cost); bucketing keeps the jit cache small
+        p_fb = max(8, _next_pow2(max(r.size for r in rows_by)))
+        fp_batch = np.zeros((nact, p_fb, auxo.d_sketch), np.float32)
+        masks = np.zeros((nact, p_fb), np.float32)
         kept_ids_list: List[np.ndarray] = []
         claimed_list: List[np.ndarray] = []
         for ci, leaf in enumerate(plan.active):
-            slot = self.bank.slot_of[leaf]
-            rows = np.nonzero(plan.kept & (plan.slot_rows == slot))[0]
+            rows = rows_by[ci]
             kept_ids = plan.client_rows[rows]
             sk_kept = res.sketches[rows]
             # center against the cross-cohort GLOBAL mean (EMA'd in leaf
@@ -623,6 +870,19 @@ class RoundPipeline:
         cur = list(plan.leaves)
         dists = distance_matrix(cur)
         gamma = auxo.gamma
+        if (
+            fl.affinity_loss_rate == 0
+            and not fl.allow_cross_cohort_duplicates
+            and not any(fb.event is not None for fb in results)
+        ):
+            # fast path (steady-state rounds): client sets are disjoint
+            # across cohorts (the dedup assert guarantees it — a policy
+            # that opts into duplicates must take the loop below, whose
+            # sequential EMA handles repeated ids) and no event mutates the
+            # leaf set mid-loop, so every per-cohort table update collapses
+            # into one fancy-indexed block over (kept clients x leaf slots)
+            self._apply_rewards_vectorized(results, cur, dists, gamma)
+            return
         for fb in results:
             ids = np.asarray(fb.client_ids, np.int64)
             if ids.size == 0:
@@ -652,6 +912,43 @@ class RoundPipeline:
             if fb.event is not None:
                 self._apply_partition(fb.event, cur)
                 dists = distance_matrix(cur)
+
+    def _apply_rewards_vectorized(self, results, cur: List[str], dists, gamma):
+        """Event-free stage-③ table application as a handful of numpy ops.
+
+        Equivalent to the per-cohort loop below (client ids are unique
+        across cohorts within a round — see check_cross_cohort_unique — so
+        the fancy-indexed writes never collide); split out because the
+        cohort loop was a visible slice of round latency at C >= 32.
+        """
+        eng = self.eng
+        live = [fb for fb in results if len(fb.client_ids) > 0]
+        if not live:
+            return
+        ids = np.concatenate([np.asarray(fb.client_ids, np.int64) for fb in live])
+        delta = np.concatenate([fb.delta for fb in live]).astype(np.float32)
+        assign = np.concatenate([fb.assign for fb in live])
+        src = np.concatenate(
+            [
+                np.full(len(fb.client_ids), cur.index(fb.cohort_id), np.int64)
+                for fb in live
+            ]
+        )
+        neg = delta < 0
+        eng.neg_streak[ids[neg]] += 1
+        eng.neg_streak[ids[~neg]] = 0
+        leaf_slots = np.array([self.bank.slot_of[l] for l in cur], np.int64)
+        own = leaf_slots[src]
+        tbl = self.table
+        # EMA reward-record update on the trained cohort's slot
+        tbl.reward[ids, own] = gamma * delta + (1.0 - gamma) * tbl.reward[ids, own]
+        has = assign >= 0
+        tbl.cluster_idx[ids[has], own[has]] = assign[has]
+        # ExploreReward propagation: ΔR/(d+1) to every OTHER leaf
+        w = delta[:, None] / (dists[src] + 1.0)
+        w[np.arange(ids.size), src] = 0.0
+        tbl.reward[ids[:, None], leaf_slots[None, :]] += w.astype(np.float32)
+        tbl.known[ids[:, None], leaf_slots[None, :]] = True
 
     def _apply_partition(self, event, cur: List[str]):
         child_slots = self.bank.spawn_children(event.parent, event.children)

@@ -1,6 +1,6 @@
 """Sharding rules: ModelConfig-aware NamedSharding assignment.
 
-Two parameter policies (DESIGN.md §5):
+Parameter policies (DESIGN.md §5):
 
 - ``tp``   — weights sharded over `model` only (heads / ffn / vocab /
              experts); replicated over the data axes. Used by the
@@ -21,6 +21,14 @@ Two parameter policies (DESIGN.md §5):
 
 Rules are name-based with a divisibility-checked fallback, so every leaf of
 every architecture gets a legal spec.
+
+The FL engine adds one more family (ARCHITECTURE.md §④): ``bank_spec`` /
+``bank_shardings`` place a stacked CohortBank leaf — the leading (capacity,)
+slot axis shards over the ``cohort`` mesh axis so independent cohorts live
+on (and train on) their own devices; the per-slot remainder of the shape
+follows the usual ``tp``/``dp`` policies above. ``row_sharding`` places the
+round's flat participant-row axis over the same ``cohort`` axis so each
+row's gather/aggregation against its cohort slot stays device-local.
 """
 from __future__ import annotations
 
@@ -242,3 +250,48 @@ def cache_shardings(shapes: Any, global_batch: int, mesh, seq_shard: bool = Fals
 
 def replicated(mesh):
     return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# CohortBank placement: slot axis -> cohort mesh axis (ARCHITECTURE.md §④)
+# ---------------------------------------------------------------------------
+def bank_spec(keystr: str, shape: Tuple[int, ...], mesh, policy: str = "dp") -> P:
+    """PartitionSpec for one stacked CohortBank leaf.
+
+    shape[0] is the bank's slot (capacity) axis — sharded over ``cohort``;
+    shape[1:] is one cohort model's leaf, sharded *within* the slot by the
+    usual ``param_spec`` policy when the mesh carries a ``model`` axis
+    (``tp``/``fsdp``), or replicated per slot under ``dp``.
+    """
+    if len(shape) == 0:
+        return P()
+    inner: Tuple = (None,) * (len(shape) - 1)
+    if policy != "dp" and "model" in mesh.axis_names and len(shape) > 1:
+        inner = tuple(param_spec(keystr, shape[1:], mesh, policy))
+        inner = inner + (None,) * (len(shape) - 1 - len(inner))
+    # normalize away trailing Nones: P("cohort") and P("cohort", None, ...)
+    # are the same placement but UNEQUAL to the jit cache — a bank entering
+    # a step under one spelling and leaving under the other would silently
+    # retrace (shard_map out_specs use the short form)
+    while inner and inner[-1] is None:
+        inner = inner[:-1]
+    return P("cohort", *inner)
+
+
+def bank_shardings(shapes: Any, mesh, policy: str = "dp"):
+    """Map a stacked-bank pytree (leaves ``(capacity, ...)``) to
+    NamedShardings: slot axis over ``cohort``, per-slot dims by `policy`."""
+
+    def one(path, leaf):
+        ks = jax.tree_util.keystr(path)
+        return NamedSharding(mesh, bank_spec(ks, leaf.shape, mesh, policy))
+
+    return jax.tree_util.tree_map_with_path(one, shapes)
+
+
+def row_sharding(mesh):
+    """Sharding for the round's flat participant-row axis: rows live on the
+    device that owns their cohort's bank slot (block-aligned by the
+    MatchPlan packing), so per-row gathers and the masked segment-sum
+    aggregation never cross the mesh."""
+    return NamedSharding(mesh, P("cohort"))

@@ -1,0 +1,59 @@
+#!/usr/bin/env python
+"""Fail on broken intra-repo links in the markdown docs.
+
+Checks every ``[text](target)`` in the given files (default: README.md,
+ARCHITECTURE.md, ROADMAP.md) whose target is not an external URL or a
+pure #anchor: the referenced path must exist relative to the file (or the
+repo root). Inline/backtick code spans are ignored.
+
+Usage:  python tools/check_links.py [files...]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DEFAULT = ["README.md", "ARCHITECTURE.md", "ROADMAP.md"]
+LINK = re.compile(r"\[[^\]]+\]\(([^)\s]+)\)")
+CODE_SPAN = re.compile(r"`[^`]*`")
+FENCE = re.compile(r"^```", re.M)
+
+
+def strip_code(text: str) -> str:
+    parts = FENCE.split(text)
+    kept = "".join(p for i, p in enumerate(parts) if i % 2 == 0)
+    return CODE_SPAN.sub("", kept)
+
+
+def check(path: Path) -> list:
+    broken = []
+    for target in LINK.findall(strip_code(path.read_text())):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        ref = target.split("#")[0]
+        if not ref:
+            continue
+        if not ((path.parent / ref).exists() or (REPO / ref).exists()):
+            broken.append((str(path.relative_to(REPO)), target))
+    return broken
+
+
+def main() -> int:
+    files = [Path(a) for a in sys.argv[1:]] or [REPO / f for f in DEFAULT]
+    broken = []
+    for f in files:
+        if not f.exists():
+            broken.append(("<missing file>", str(f)))
+            continue
+        broken.extend(check(f))
+    for where, target in broken:
+        print(f"BROKEN LINK in {where}: {target}")
+    if not broken:
+        print(f"ok: {len(files)} files, no broken intra-repo links")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
