@@ -122,6 +122,11 @@ def bench(n_leaves: int, shards: int, rounds: int, warmup: int, seed: int,
         "exec_dispatches_per_round": (eng.pipeline.exec_dispatches - d0) / rounds,
         "compiled_executables": eng.pipeline._exec_step._cache_size(),
         "bank_mbytes_per_device": bank_bytes_per_device(eng) / 1e6,
+        "bank_mbytes_total": bank_bytes_per_device(eng) * eng.pipeline.n_shards / 1e6,
+        # all live device bytes after the run: with the fused step's bank
+        # donation (no-op on CPU, in-place on accelerators) steady state
+        # must hold ~ONE bank copy plus round buffers, never two banks
+        "live_mbytes": sum(a.nbytes for a in jax.live_arrays()) / 1e6,
         "dropped_participants": eng.pipeline.dropped_rows,
     }
 
@@ -145,7 +150,10 @@ def main():
     )
     args = ap.parse_args()
     if args.smoke:
-        args.cohorts, args.rounds, args.warmup = [8], 2, 2
+        # C=32 included: the peak-memory tripwire below guards the fused
+        # step's bank donation at the scale the round-overlap pipeline
+        # double-buffers
+        args.cohorts, args.rounds, args.warmup = [8, 32], 2, 2
 
     sweep = []
     for c in args.cohorts:
@@ -170,9 +178,14 @@ def main():
         for side in (single, sharded):
             assert side["exec_dispatches_per_round"] == 1.0, side
             assert side["compiled_executables"] == 1, side
+            # peak-memory tripwire for the donated fused step: steady state
+            # holds at most ~one bank copy (params + opt) plus transient
+            # round buffers — a second persistent bank would double this
+            assert side["live_mbytes"] < 2.0 * side["bank_mbytes_total"] + 128.0, side
 
     if args.smoke:
-        print("smoke OK: compile-once + 1 dispatch/round hold under sharding")
+        print("smoke OK: compile-once + 1 dispatch/round + bank memory hold "
+              "under sharding")
         return
 
     by_c = {row["cohorts"]: row for row in sweep}

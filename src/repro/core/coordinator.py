@@ -21,6 +21,7 @@ import numpy as np
 from repro.core.clustering import (
     OnlineClustering,
     assign_and_update_batched,
+    assign_and_update_np,
     kmeans_bootstrap_batched,
     population_heterogeneity,
     stack_states,
@@ -28,7 +29,7 @@ from repro.core.clustering import (
 )
 from repro.core.cohort import AffinityMessage, CohortTree
 from repro.core.criteria import PartitionCriteria
-from repro.core.selection import instant_reward, instant_reward_batched
+from repro.core.selection import instant_reward, instant_reward_batched, instant_reward_np
 
 
 def _population_heterogeneity_np(sk: np.ndarray, m: np.ndarray) -> float:
@@ -164,6 +165,31 @@ class CohortCoordinator:
         margin = sims[0][0] - sims[1][0]
         return sims[0][1], margin
 
+    def match_many(self, fingerprints: np.ndarray):
+        """Vectorized `match_with_confidence` over an (N, d) batch.
+
+        Returns (best_idx (N,), margin (N,), leaves): `leaves` is the
+        ordered identity-bearing leaf list `best_idx` indexes into. When
+        fewer than 2 leaves hold identities it returns empty arrays and an
+        empty list — callers fall back exactly like the scalar path's
+        (None, 0.0). One matrix product replaces N python descents over
+        the identity dict (evaluation-time serving loops every client).
+        """
+        leaves = [l for l in self.tree.leaves() if l in self.identity]
+        n = int(np.asarray(fingerprints).shape[0])
+        if len(leaves) < 2:
+            return np.zeros(n, np.int64), np.zeros(n, np.float32), []
+        idents = np.stack([self.identity[l] for l in leaves]).astype(np.float32)
+        idn = idents / (np.linalg.norm(idents, axis=1, keepdims=True) + 1e-9)
+        fp = np.asarray(fingerprints, np.float32)
+        fpn = fp / (np.linalg.norm(fp, axis=1, keepdims=True) + 1e-9)
+        sims = fpn @ idn.T  # (N, L)
+        order = np.argsort(sims, axis=1)
+        best = order[:, -1]
+        rows = np.arange(n)
+        margin = (sims[rows, best] - sims[rows, order[:, -2]]).astype(np.float32)
+        return best.astype(np.int64), margin, leaves
+
     # ------------------------------------------------------------- feedback
     def feedback(
         self,
@@ -237,6 +263,7 @@ class CohortCoordinator:
         total_rounds: int,
         claimed_list: Optional[Sequence[Sequence[bool]]] = None,
         batched: bool = True,
+        backend: str = "device",
     ) -> List[CohortRoundFeedback]:
         """Batched ④-feedback for ALL leaf cohorts of a round (§3.2 stage 4).
 
@@ -248,6 +275,15 @@ class CohortCoordinator:
         once-per-cohort k-means bootstrap stays a per-cohort call. Partition
         criteria are evaluated in cohort order with events applied
         immediately, exactly like sequential per-cohort feedback() calls.
+
+        backend="host" (the §⑤ overlapped pipeline) runs the steady-state
+        clustering + reward math as numpy twins instead of device
+        dispatches: a dispatch here would queue behind the in-flight fused
+        round step, and its synchronous fetch would serialize the very
+        pipeline the overlap hides — the per-cohort arrays are tiny, so
+        the host math is also simply faster than the dispatch overhead.
+        The once-per-cohort-lifetime k-means bootstrap stays on device in
+        both backends (rare, and worth the kernel).
         """
         C = len(cohort_ids)
         results: List[CohortRoundFeedback] = []
@@ -306,9 +342,18 @@ class CohortCoordinator:
                 for i in init_idx:
                     a, _ = self.clusterers[cohort_ids[i]].step(sketches[i], masks[i])
                     assigns[i] = a
-            # every initialized cohort: ONE vmapped assign+EMA-refresh
-            # dispatch (batched), or the legacy per-cohort host calls
-            if ready_idx and batched:
+            # every initialized cohort: numpy twins on the host backend,
+            # ONE vmapped assign+EMA-refresh dispatch (batched), or the
+            # legacy per-cohort host calls
+            if ready_idx and backend == "host":
+                ema = self.clusterers[cohort_ids[ready_idx[0]]].ema
+                for i in ready_idx:
+                    cl = self.clusterers[cohort_ids[i]]
+                    cl.state, a, _sims = assign_and_update_np(
+                        cl.state, sk_host[i], mask_host[i], ema
+                    )
+                    assigns[i] = a
+            elif ready_idx and batched:
                 stacked = stack_states(
                     [self.clusterers[cohort_ids[i]].state for i in ready_idx]
                 )
@@ -330,8 +375,13 @@ class CohortCoordinator:
                     )
                     assigns[i] = a
 
-        # instant rewards for all cohorts: one vmapped dispatch (batched)
-        if batched:
+        # instant rewards for all cohorts: one vmapped dispatch (batched),
+        # or the numpy twin on the host backend
+        if backend == "host":
+            deltas = np.stack(
+                [instant_reward_np(sk_host[i], mask_host[i])[0] for i in range(C)]
+            )
+        elif batched:
             deltas = np.asarray(
                 instant_reward_batched(jnp.asarray(sketches), jnp.asarray(masks))[0]
             )
@@ -391,6 +441,11 @@ class CohortCoordinator:
         self, cohort_id: str, round_idx: int, total_rounds: int, participants: int
     ) -> Optional[PartitionEvent]:
         if len(self.tree.leaves()) >= self.max_cohorts:
+            return None
+        if not self.tree.nodes[cohort_id].is_leaf:
+            # a drained in-flight round (§⑤ pipeline flush) can deliver
+            # feedback for a cohort that partitioned while the round was
+            # executing — never re-partition a non-leaf
             return None
         clusterer = self.clusterers[cohort_id]
         st = self.stats[cohort_id]

@@ -43,6 +43,26 @@ def instant_reward(sketches: jnp.ndarray, mask=None) -> Tuple[jnp.ndarray, jnp.n
     return delta, d
 
 
+def instant_reward_np(sketches: np.ndarray, mask=None) -> Tuple[np.ndarray, np.ndarray]:
+    """Numpy twin of `instant_reward` for the HOST control plane (§⑤):
+    stage ③ of the overlapped round pipeline avoids device dispatches,
+    which would queue behind the in-flight fused step."""
+    x = np.asarray(sketches, np.float32)
+    m = (
+        np.ones((x.shape[0],), np.float32)
+        if mask is None
+        else np.asarray(mask, np.float32)
+    )
+    tot = max(float(m.sum()), 1.0)
+    center = (x * m[:, None]).sum(0, keepdims=True) / tot
+    d = np.linalg.norm(x - center, axis=1)
+    mean_d = float((d * m).sum()) / tot
+    var_d = float((m * (d - mean_d) ** 2).sum()) / tot
+    thr = mean_d + np.sqrt(max(var_d, 0.0))
+    delta = 1.0 - d / max(thr, 1e-9)
+    return delta.astype(np.float32), d
+
+
 @jax.jit
 def instant_reward_batched(
     sketches: jnp.ndarray, mask: jnp.ndarray

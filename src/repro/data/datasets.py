@@ -49,6 +49,49 @@ class FederatedClassification:
         idx = rng.integers(0, len(c.y), size=(steps, batch))
         return c.x[idx], c.y[idx]
 
+    def _ensure_flat(self):
+        """Build the flat population view: all client data concatenated
+        along one sample axis with per-client offsets. Shares dtype/values
+        with `clients` (one extra copy of the population, built once)."""
+        if getattr(self, "_flat_x", None) is not None:
+            return
+        self._flat_sizes = np.array([len(c.y) for c in self.clients], np.int64)
+        self._flat_offsets = np.concatenate(
+            [[0], np.cumsum(self._flat_sizes)[:-1]]
+        )
+        self._flat_x = np.concatenate([c.x for c in self.clients], axis=0)
+        self._flat_y = np.concatenate([c.y for c in self.clients], axis=0)
+
+    def client_sizes(self, client_ids=None) -> np.ndarray:
+        """Dataset size per client as one array (no python loop per call)."""
+        self._ensure_flat()
+        if client_ids is None:
+            return self._flat_sizes
+        return self._flat_sizes[np.asarray(client_ids, np.int64)]
+
+    def sample_batches(
+        self, client_ids, batch: int, steps: int, rng: np.random.Generator
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Batched population sampling: (R, steps, batch, d), (R, steps, batch).
+
+        One vectorized draw for R clients — the round pipeline's data plane
+        (`RoundPipeline._pack_rows`) calls this once per round instead of R
+        `sample_batch` calls. Row i samples with replacement from client
+        `client_ids[i]`'s local data: a single uniform block scaled by each
+        client's dataset size, then one fancy-indexed gather from the flat
+        population view. Draws differ from the per-client `sample_batch`
+        stream (one Generator call instead of R) while being identically
+        distributed.
+        """
+        ids = np.asarray(client_ids, np.int64)
+        self._ensure_flat()
+        sizes = self._flat_sizes[ids]
+        u = rng.random((ids.size, steps, batch))
+        # u < 1 strictly, so floor(u * n) <= n - 1: always in range
+        idx = (u * sizes[:, None, None]).astype(np.int64)
+        g = self._flat_offsets[ids][:, None, None] + idx
+        return self._flat_x[g], self._flat_y[g]
+
 
 def make_population(
     n_clients: int = 400,

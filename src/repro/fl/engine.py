@@ -64,6 +64,15 @@ class FLConfig:
     # execution mode: "batched" = one fused device step per round (default);
     # "sequential" = per-cohort dispatches (reference oracle)
     execution: str = "batched"
+    # §⑤ round pipelining (ARCHITECTURE.md): 0 = synchronous rounds
+    # (plan → execute → feedback, the reference order); 1 = depth-2
+    # overlap — while the device executes round r the host retires round
+    # r-1's feedback and plans/packs round r+1 against one-round-stale
+    # tables (paper-compatible: matching is ε-greedy over slowly-moving
+    # EMA state). Partitions flush the pipeline. Requires
+    # execution="batched". Evaluation drains the pipeline first, so
+    # histories remain consistent snapshots.
+    round_overlap: int = 0
     # cohort-parallel placement (ARCHITECTURE.md §④): shard the CohortBank
     # slot axis (and the flat row axis) over a `cohort` mesh of this many
     # devices. 0/1 = single-device; >1 requires execution="batched" and at
@@ -215,6 +224,7 @@ class AuxoEngine:
         self.global_mu_seen = False
 
         self._vmapped_sketch = jax.jit(jax.vmap(self.sketcher))
+
         self._vmapped_train = jax.vmap(
             lambda p, xs, ys, k: local_train(
                 self.task.loss,
@@ -229,6 +239,19 @@ class AuxoEngine:
             ),
             in_axes=(None, 0, 0, 0),
         )
+        # plain-SGD variants for serving/personalization (no prox/DP, like
+        # the scalar probe and FTFA paths): shared root params for probe
+        # batches, per-row params for FTFA fine-tuning
+        _plain = lambda p, xs, ys, k: local_train(  # noqa: E731
+            self.task.loss, p, xs, ys, k, lr=fl.lr
+        )
+        self._vmapped_probe_train = jax.vmap(_plain, in_axes=(None, 0, 0, 0))
+        self._vmapped_train_rows = jax.vmap(_plain, in_axes=(0, 0, 0, None))
+        # serve-time probe fingerprints, cached across evaluate calls and
+        # invalidated when the cohort tree partitions (the root model the
+        # probes train against and the identity targets shift then)
+        self._probe_cache: Dict[int, np.ndarray] = {}
+        self._probe_cache_key = -1
         self.pipeline = RoundPipeline(self, mode=fl.execution)
 
     # -------------------------------------------------------------- views
@@ -267,6 +290,8 @@ class AuxoEngine:
             self.step(r)
             if r % self.fl.eval_every == 0 or r == self.fl.rounds - 1:
                 self.history.append(self.evaluate(r))
+        # §⑤: retire any round still in flight so post-run state is final
+        self.pipeline.flush()
         return self.history
 
     # ------------------------------------------------------------ one round
@@ -279,70 +304,130 @@ class AuxoEngine:
         self.pipeline._apply_partition(event, self.coordinator.tree.leaves())
 
     # ----------------------------------------------------------------- eval
-    def _probe_fingerprint(self, c: int) -> np.ndarray:
-        """One-shot serve-time fingerprint for a never-trained client.
+    def _probe_fingerprints(self, cs: np.ndarray) -> np.ndarray:
+        """Serve-time probe fingerprints for never-trained clients, batched.
 
-        The client runs its usual local steps against the ROOT model, the
-        update is sketched and centered against the global reference mean —
-        the same signal training fingerprints EMA over, just single-round.
+        Each client runs its usual local steps against the ROOT model; the
+        updates are sketched and centered against the global reference mean
+        — the same signal training fingerprints EMA over, just single-round.
         Deterministic per client (own rng / key), so it never perturbs the
-        training RNG stream.
+        training RNG stream. ALL cache misses train in ONE vmapped dispatch
+        (the seed engine dispatched once per never-trained client per
+        evaluate call); results are cached across evaluate calls and
+        invalidated when the cohort tree partitions — the root model and
+        the identity targets shift discontinuously then.
         """
-        rng = np.random.default_rng(700_001 + c)
-        x, y = self.pop.sample_batch(c, self.fl.batch_size, self.fl.local_steps, rng)
-        delta, _ = local_train(
-            self.task.loss,
-            self.pipeline.bank.params_of("0"),
-            jnp.asarray(x),
-            jnp.asarray(y),
-            jax.random.key(c),
-            lr=self.fl.lr,
+        key = len(self.coordinator.partitions)
+        if key != self._probe_cache_key:
+            self._probe_cache.clear()
+            self._probe_cache_key = key
+        cs = np.asarray(cs, np.int64)
+        miss = np.array(
+            [c for c in cs if int(c) not in self._probe_cache], np.int64
         )
-        sk = np.asarray(self._vmapped_sketch(jax.tree.map(lambda a: a[None], delta)))[0]
-        ctr = sk - self.global_mu
-        return (ctr / (np.linalg.norm(ctr) + 1e-9)).astype(np.float32)
+        if miss.size:
+            xs, ys = [], []
+            for c in miss:  # cheap host draws; the device work is batched
+                rng = np.random.default_rng(700_001 + int(c))
+                x, y = self.pop.sample_batch(
+                    int(c), self.fl.batch_size, self.fl.local_steps, rng
+                )
+                xs.append(x)
+                ys.append(y)
+            keys = jax.vmap(jax.random.key)(jnp.asarray(miss))
+            deltas, _ = self._vmapped_probe_train(
+                self.pipeline.bank.params_of("0"),
+                jnp.asarray(np.stack(xs)),
+                jnp.asarray(np.stack(ys)),
+                keys,
+            )
+            sk = np.asarray(self._vmapped_sketch(deltas))
+            ctr = sk - self.global_mu[None, :]
+            ctr /= np.linalg.norm(ctr, axis=1, keepdims=True) + 1e-9
+            for j, c in enumerate(miss):
+                self._probe_cache[int(c)] = ctr[j].astype(np.float32)
+        return np.stack([self._probe_cache[int(c)] for c in cs])
 
-    def client_cohort(self, c: int) -> str:
-        """Cohort whose model SERVES client c (evaluation-time routing).
+    def _probe_fingerprint(self, c: int) -> np.ndarray:
+        """Single-client view of `_probe_fingerprints` (shares its cache)."""
+        return self._probe_fingerprints(np.array([c], np.int64))[0]
 
-        Fingerprint identity-matching first (the strongest signal; ΔR
-        rewards are only *relative* within a round). An unconfident match
-        falls back to the retained ancestor (generalist) model — a
-        confidently-wrong specialist is worse than the generalist. Clients
-        without a training fingerprint probe one (see _probe_fingerprint).
+    def serving_cohorts(self, clients=None) -> List[str]:
+        """Cohorts whose models SERVE the given clients (default: all).
+
+        Vectorized evaluation-time routing: fingerprint identity-matching
+        first (the strongest signal; ΔR rewards are only *relative* within
+        a round), as one matrix product over all fingerprinted clients
+        (`CohortCoordinator.match_many`). An unconfident match falls back
+        to the retained ancestor (generalist) model — a confidently-wrong
+        specialist is worse than the generalist. Clients without a
+        training fingerprint probe one; all probes of a call batch into a
+        single vmapped dispatch (`_probe_fingerprints`). Unconfident
+        *training* fingerprints retry once with a fresh probe (stale-EMA
+        rescue) before falling back.
         """
+        cs = (
+            np.arange(self.pop.n_clients, dtype=np.int64)
+            if clients is None
+            else np.asarray(clients, np.int64)
+        )
         can_probe = (
             self.auxo.enabled
             and self.auxo.probe_serving
             and self.global_mu_seen
             and len(self.coordinator.identity) >= 2
         )
-        fp = None
-        if self.fp_seen[c]:
-            fp = self.fingerprint[c]
-        elif can_probe:
-            fp = self._probe_fingerprint(c)
-        if fp is not None:
-            leaf, margin = self.coordinator.match_with_confidence(fp)
-            if leaf is not None and margin < self.auxo.serve_confidence and can_probe and self.fp_seen[c]:
-                # stale-EMA rescue: an unconfident training fingerprint may
-                # simply lag the cohorts' drift — retry with a fresh probe
-                leaf, margin = self.coordinator.match_with_confidence(
-                    self._probe_fingerprint(c)
-                )
-            if leaf is not None and margin >= self.auxo.serve_confidence:
-                return leaf
-            if leaf is not None:
-                return "0"  # generalist (pre-partition) model
-        pref = self.preferred_cohort(c) or "0"
-        return self.coordinator.match_request(c, pref, -1) or "0"
+        have = self.fp_seen[cs]
+        fps = np.zeros((cs.size, self.auxo.d_sketch), np.float32)
+        fps[have] = self.fingerprint[cs[have]]
+        need_probe = ~have if can_probe else np.zeros(cs.size, bool)
+        if need_probe.any():
+            fps[need_probe] = self._probe_fingerprints(cs[need_probe])
+        has_fp = have | need_probe
+        out: List[Optional[str]] = [None] * cs.size
+        if has_fp.any():
+            sub = np.flatnonzero(has_fp)
+            best, margin, leaves = self.coordinator.match_many(fps[sub])
+            if leaves:  # >= 2 identities established
+                conf = self.auxo.serve_confidence
+                if can_probe:
+                    # stale-EMA rescue: an unconfident training fingerprint
+                    # may simply lag the cohorts' drift — retry with a
+                    # fresh probe (one batched dispatch for all retries)
+                    retry = have[sub] & (margin < conf)
+                    if retry.any():
+                        # the rescue promises a FRESH probe (the cohorts and
+                        # global mean drift between evaluate calls): drop any
+                        # cached entries so these clients recompute
+                        for c in cs[sub[retry]]:
+                            self._probe_cache.pop(int(c), None)
+                        pf = self._probe_fingerprints(cs[sub[retry]])
+                        b2, m2, _ = self.coordinator.match_many(pf)
+                        best[retry], margin[retry] = b2, m2
+                for j, i in enumerate(sub):
+                    out[i] = leaves[best[j]] if margin[j] >= conf else "0"
+        for i in range(cs.size):
+            # no usable fingerprint (or identities not established yet):
+            # reward-table preference + coordinator tree descent, as before
+            if out[i] is None:
+                c = int(cs[i])
+                pref = self.preferred_cohort(c) or "0"
+                out[i] = self.coordinator.match_request(c, pref, -1) or "0"
+        return out
+
+    def client_cohort(self, c: int) -> str:
+        """Cohort whose model SERVES client c (see serving_cohorts)."""
+        return self.serving_cohorts(np.array([c], np.int64))[0]
 
     def evaluate(self, r: int) -> Dict[str, Any]:
+        # §⑤: retire the in-flight round first — fingerprints, identities
+        # and affinity tables must be consistent with the bank models
+        self.pipeline.flush()
         # per-client accuracy: its serving cohort's model on its group data
-        # (serving may fall back to an ANCESTOR model — see client_cohort)
+        # (serving may fall back to an ANCESTOR model — see serving_cohorts)
         leaves = self.coordinator.tree.leaves()
         cohorts = self.cohorts
-        serving = [self.client_cohort(c) for c in range(self.pop.n_clients)]
+        serving = self.serving_cohorts()
         accs_by = {}
         for cid in set(serving) | set(leaves):
             p = cohorts[cid].params
@@ -374,20 +459,42 @@ class AuxoEngine:
 
     # ------------------------------------------------- FTFA personalization
     def ftfa_eval(self, steps: int = 5) -> float:
-        """Fine-tune-then-average personalization on top of cohort models."""
-        accs = []
-        cohorts = self.cohorts
-        for c in range(0, self.pop.n_clients, max(1, self.pop.n_clients // 100)):
-            leaf = self.client_cohort(c)
-            p = cohorts[leaf].params
-            x, y = self.pop.sample_batch(c, self.fl.batch_size, steps, self.rng)
-            delta, _ = local_train(
-                self.task.loss, p, jnp.asarray(x), jnp.asarray(y),
-                jax.random.key(0), lr=self.fl.lr
+        """Fine-tune-then-average personalization on top of cohort models.
+
+        ONE vmapped local_train dispatch fine-tunes every sampled client
+        against its own serving cohort's model (per-row params gathered
+        from the stacked bank), and — for tasks exposing the traceable
+        ``correct_fraction`` — ONE vmapped dispatch scores all personalized
+        models; the seed path dispatched a train + an eval per client.
+        """
+        self.pipeline.flush()
+        cs = np.arange(
+            0, self.pop.n_clients, max(1, self.pop.n_clients // 100)
+        )
+        serving = self.serving_cohorts(cs)
+        bank = self.pipeline.bank
+        slots = jnp.asarray([bank.slot_of[l] for l in serving])
+        prow = jax.tree.map(lambda a: a[slots], bank.params)
+        xs, ys = self.pop.sample_batches(cs, self.fl.batch_size, steps, self.rng)
+        deltas, _ = self._vmapped_train_rows(
+            prow, jnp.asarray(xs), jnp.asarray(ys), jax.random.key(0)
+        )
+        pf = jax.tree.map(lambda a, b: a + b, prow, deltas)
+        groups = np.array([self.pop.clients[int(c)].group for c in cs])
+        if hasattr(self.task, "correct_fraction"):
+            tx = np.stack([self.pop.test_x[g] for g in range(self.pop.n_groups)])
+            ty = np.stack([self.pop.test_y[g] for g in range(self.pop.n_groups)])
+            accs = jax.vmap(self.task.correct_fraction)(
+                pf, jnp.asarray(tx[groups]), jnp.asarray(ty[groups])
             )
-            pf = jax.tree.map(lambda a, b: a + b, p, delta)
-            g = self.pop.clients[c].group
-            accs.append(self.task.accuracy(pf, self.pop.test_x[g], self.pop.test_y[g]))
+            return float(jnp.mean(accs))
+        accs = []
+        for j in range(cs.size):  # tasks without a traceable accuracy
+            p = jax.tree.map(lambda a: a[j], pf)
+            g = int(groups[j])
+            accs.append(
+                self.task.accuracy(p, self.pop.test_x[g], self.pop.test_y[g])
+            )
         return float(np.mean(accs))
 
 

@@ -37,6 +37,22 @@ feedback, but executes one device dispatch per cohort exactly like the
 seed engine — equivalence tests check both modes produce the same models,
 and benchmarks/round_latency.py measures the speedup.
 
+ROUND PIPELINING (ARCHITECTURE.md §⑤): with ``FLConfig.round_overlap = 1``
+the three stages form a depth-2 software pipeline. The fused stage-② step
+is dispatched NON-blocking (``ExecResult`` holds device arrays; stage ③
+fetches lazily, donation on accelerators) and every round executes against
+a plan computed BEFORE the previous round's feedback landed — one-round
+staleness, paper-compatible: matching is ε-greedy over slowly-moving
+affinity/EMA state. While the device executes round r, the host applies
+round r-1's FeedbackBatch and plans + packs (and device-stages) round r+1;
+stage-①/③ control math runs as numpy twins (``host_control``) because a
+device dispatch there would queue behind the in-flight step and serialize
+the pipeline. Partition events are the one place a stale plan is invalid;
+they FLUSH the pipeline (drain the in-flight round synchronously, discard
+the staged plan, refill against the reseeded tables). ``round_overlap = 0``
+keeps the strict synchronous plan → execute → feedback order, bit-equal to
+the pre-overlap engine.
+
 PLACEMENT (ARCHITECTURE.md §④): with ``FLConfig.cohort_shards = S > 1`` the
 CohortBank's slot axis shards over a ``cohort`` device mesh
 (launch/mesh.make_cohort_mesh + launch/sharding.bank_shardings) and the
@@ -61,8 +77,9 @@ Semantic deltas vs the seed engine (documented, benign):
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -70,6 +87,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.clustering import _cosine_np
 from repro.core.cohort import distance_matrix
 from repro.fl.algorithms import apply_stacked
 from repro.fl.client import local_train
@@ -315,12 +333,31 @@ class MatchPlan:
     dropped: int  # participants dropped to a full shard row block (§④)
 
 
-@dataclasses.dataclass
 class ExecResult:
-    """Stage-② output: per-row training artifacts (host copies)."""
+    """Stage-② output: per-row training artifacts, fetched lazily.
 
-    sketches: np.ndarray  # (B, d_sketch)
-    losses: np.ndarray  # (B,)
+    The batched path stores DEVICE arrays: converting them to numpy blocks
+    until the fused step finishes, so the conversion happens on first
+    attribute access (stage ③) rather than at dispatch time — the dispatch
+    itself returns immediately and the host can retire the previous round
+    and plan/pack the next one while the device trains this one (§⑤).
+    """
+
+    def __init__(self, sketches, losses):
+        self._sketches = sketches  # (B, d_sketch) device or host
+        self._losses = losses  # (B,)
+
+    @property
+    def sketches(self) -> np.ndarray:
+        if not isinstance(self._sketches, np.ndarray):
+            self._sketches = np.asarray(self._sketches)
+        return self._sketches
+
+    @property
+    def losses(self) -> np.ndarray:
+        if not isinstance(self._losses, np.ndarray):
+            self._losses = np.asarray(self._losses)
+        return self._losses
 
 
 # ---------------------------------------------------------------------------
@@ -393,7 +430,32 @@ class RoundPipeline:
         self.exec_width = self.shard_width * self.n_shards
         self.exec_dispatches = 0  # device dispatches issued by stage ② so far
         self.dropped_rows = 0  # participants dropped to full shard blocks
+        # §⑤ round pipelining: 0 = synchronous, 1 = depth-2 overlap
+        self.overlap = int(getattr(fl, "round_overlap", 0) or 0)
+        if self.overlap:
+            assert self.overlap == 1, "only depth-2 overlap (round_overlap=1)"
+            assert mode == "batched", "round overlap requires the batched pipeline"
+        # host control plane (§⑤): with the overlap on, stage-①/③ control
+        # math (matching cosine, clustering feedback, rewards) runs as
+        # numpy twins — any device dispatch there queues behind the
+        # in-flight fused step and its fetch serializes the pipeline.
+        # Overridable for the staleness-oracle tests.
+        self.host_control = bool(self.overlap)
+        self._inflight = None  # (plan, res) dispatched but not yet retired
+        self._staged: Optional[Tuple[int, Any, Any]] = None  # (round, plan, packed)
+        self.flushes = 0  # partition-triggered pipeline flushes
+        # cumulative host wall-time per stage (benchmarks/round_overlap.py)
+        self.stage_seconds = {
+            "plan": 0.0, "pack": 0.0, "dispatch": 0.0, "feedback": 0.0
+        }
         self._exec_step = self._make_exec_step()
+
+    def _timed(self, key: str, fn, *args):
+        t0 = time.perf_counter()
+        try:
+            return fn(*args)
+        finally:
+            self.stage_seconds[key] += time.perf_counter() - t0
 
     # ------------------------------------------------------------ stage ①
     def plan_round(self, r: int) -> Optional[MatchPlan]:
@@ -497,9 +559,7 @@ class RoundPipeline:
         if not fl.allow_cross_cohort_duplicates:
             check_cross_cohort_unique(client_rows, kept)
         self.dropped_rows += dropped
-        sizes = np.array(
-            [len(eng.pop.clients[c].y) for c in client_rows], np.float32
-        )
+        sizes = eng.pop.client_sizes(client_rows).astype(np.float32)
         return MatchPlan(
             round_idx=r,
             leaves=leaves,
@@ -567,18 +627,26 @@ class RoundPipeline:
                     [eng.coordinator.identity[l] for l in ident_leaves]
                 ).astype(np.float32)
                 fps = eng.fingerprint[avail[to_root]]
-                # pad the fingerprint batch to a power-of-two bucket (floor
-                # 512): the raw to_root count varies every round and would
-                # recompile the cosine kernel each time (measured: the
-                # dominant stage-① cost at C = 32); the floor keeps steady
-                # state at ONE compiled size — the padded rows are zeros
-                # and the extra compute is trivial
-                n = fps.shape[0]
-                fpad = np.zeros((max(512, _next_pow2(n)), fps.shape[1]), np.float32)
-                fpad[:n] = fps
-                sims = np.asarray(
-                    kops.cosine_similarity(jnp.asarray(fpad), jnp.asarray(idents))
-                )[:n]
+                if self.host_control:
+                    # §⑤: numpy twin — a kernel dispatch here would queue
+                    # behind the in-flight fused step and its fetch would
+                    # stall the overlapped schedule
+                    sims = _cosine_np(fps, idents)
+                else:
+                    # pad the fingerprint batch to a power-of-two bucket
+                    # (floor 512): the raw to_root count varies every round
+                    # and would recompile the cosine kernel each time
+                    # (measured: the dominant stage-① cost at C = 32); the
+                    # floor keeps steady state at ONE compiled size — the
+                    # padded rows are zeros and the extra compute is trivial
+                    n = fps.shape[0]
+                    fpad = np.zeros(
+                        (max(512, _next_pow2(n)), fps.shape[1]), np.float32
+                    )
+                    fpad[:n] = fps
+                    sims = np.asarray(
+                        kops.cosine_similarity(jnp.asarray(fpad), jnp.asarray(idents))
+                    )[:n]
                 li = np.array([leaves.index(l) for l in ident_leaves])
                 want[to_root] = li[np.argmax(sims, axis=1)]
             else:
@@ -601,7 +669,7 @@ class RoundPipeline:
     def _make_exec_step(self):
         """Build the fused fixed-shape round step (compiled once).
 
-        (bank_params, bank_opt, slot_rows, xs, ys, key_data, sizes, kept,
+        (bank_params, bank_opt, slot_rows, xs, ys, seed, inv, sizes, kept,
         upd) -> (new_params, new_opt, sketches, losses); every leaf
         cohort's local training, masked aggregation, and server-opt
         application in one program. ``slot_rows`` are bank slot ids —
@@ -620,9 +688,19 @@ class RoundPipeline:
         opt = eng.server_opt
         sketcher = eng.sketcher
         qfed_q = fl.qfed_q
+        exec_width = self.exec_width
 
-        def step(bparams, bopt, slot_rows, xs, ys, kd, sizes, kept, upd, *, nseg):
-            keys = jax.random.wrap_key_data(kd)
+        def step(bparams, bopt, slot_rows, xs, ys, seed, inv, sizes, kept, upd,
+                 *, nseg):
+            # per-row PRNG keys derived IN-GRAPH (§⑤): the former host-side
+            # jax.random.split + key_data fetch was a device round-trip on
+            # the overlapped hot path whose fetch stalled behind the
+            # in-flight step. Bit-identical threefry stream: row i uses
+            # split(key(seed), B)[inv[i]], exactly what the host computed.
+            # Under shard_map the split is replicated (seed is replicated,
+            # `inv` carries global canonical indices per local row).
+            base = jax.random.split(jax.random.key(seed), exec_width)
+            keys = base[inv]
             # each flat row trains against ITS cohort's model (gather)
             prow = jax.tree.map(lambda a: a[slot_rows], bparams)
             deltas, losses = jax.vmap(
@@ -659,61 +737,138 @@ class RoundPipeline:
             sketches = jax.vmap(sketcher)(deltas)
             return new_p, new_o, sketches, losses
 
+        # bparams/bopt are DONATED on accelerators: the step's output bank
+        # reuses the input buffers, so the §⑤ double-buffered schedule
+        # (round r+1 dispatched while round r's outputs are still
+        # referenced by the host) keeps ONE live bank copy instead of two;
+        # sharded in/out specs are identical so donation composes with the
+        # mesh placement. On CPU donation is gated OFF: XLA CPU cannot
+        # donate, and requesting it forces the dispatch to synchronize on
+        # input readiness (measured: a donated 8-device shard_map call
+        # blocks for the full previous-step runtime, serializing the
+        # pipeline this module exists to overlap).
+        donate = {} if jax.default_backend() == "cpu" else {"donate_argnums": (0, 1)}
         if self.n_shards == 1:
-            return jax.jit(partial(step, nseg=self.bank.capacity))
+            return jax.jit(partial(step, nseg=self.bank.capacity), **donate)
         spec = P("cohort")
         local = shard_map(
             partial(step, nseg=self.bank.slots_per_shard),
             mesh=self.mesh,
-            in_specs=(spec,) * 9,
+            # all row/slot inputs shard over the cohort axis; the PRNG seed
+            # is replicated (every device re-derives the global key table)
+            in_specs=(spec,) * 5 + (P(),) + (spec,) * 4,
             out_specs=(spec,) * 4,
             check_rep=False,
         )
-        return jax.jit(local)
+        return jax.jit(local, **donate)
 
-    def _sample_rows(self, plan: MatchPlan):
-        """Host-side data plane: local batches for every real flat row.
+    def _pack_rows(self, plan: MatchPlan):
+        """Host-side data plane: local batches + PRNG keys for every row.
 
-        Rows are visited in the plan's canonical order (leaf by leaf) so
-        the host RNG stream is identical for every shard layout; padding
-        rows replicate the first real row's batch (they carry weight 0).
+        Rows are sampled in the plan's canonical order (leaf by leaf) as
+        ONE batched population draw (`pop.sample_batches`) — the seed
+        per-client `sample_batch` loop was the dominant host cost of stage
+        ② and serialized against the device; padding rows replicate the
+        first real row's batch (they carry weight 0). The canonical order
+        keeps the draw identical for every shard layout. Returns buffers
+        ready for `execute` — already staged on device in batched mode
+        (`_stage_buffers`), host arrays for the sequential oracle; in the
+        §⑤ overlapped schedule this runs one round ahead, while the device
+        executes the previous round.
         """
         eng, fl = self.eng, self.eng.fl
-        n_rows = plan.slot_rows.shape[0]
-        xs = ys = None
-        for i in plan.order[: plan.n_real]:
-            c = int(plan.client_rows[i])
-            x, y = eng.pop.sample_batch(c, fl.batch_size, fl.local_steps, eng.rng)
-            if c in eng.corrupted:
-                y = eng.rng.integers(0, eng.pop.n_classes, size=y.shape).astype(
-                    y.dtype
-                )
-            if xs is None:
-                xs = np.zeros((n_rows,) + x.shape, x.dtype)
-                ys = np.zeros((n_rows,) + y.shape, y.dtype)
-            xs[i], ys[i] = x, y
+        B = plan.slot_rows.shape[0]
+        order_real = plan.order[: plan.n_real]
+        cids = plan.client_rows[order_real]
+        xs_r, ys_r = eng.pop.sample_batches(
+            cids, fl.batch_size, fl.local_steps, eng.rng
+        )
+        if eng.corrupted:
+            bad = np.isin(
+                cids, np.fromiter(eng.corrupted, np.int64, len(eng.corrupted))
+            )
+            if bad.any():
+                ys_r[bad] = eng.rng.integers(
+                    0, eng.pop.n_classes, size=ys_r[bad].shape
+                ).astype(ys_r.dtype)
+        xs = np.zeros((B,) + xs_r.shape[1:], xs_r.dtype)
+        ys = np.zeros((B,) + ys_r.shape[1:], ys_r.dtype)
+        xs[order_real] = xs_r
+        ys[order_real] = ys_r
         pad = plan.order[plan.n_real :]
         src = int(plan.order[0])
         xs[pad] = xs[src]
         ys[pad] = ys[src]
-        return xs, ys
-
-    def execute(self, plan: MatchPlan) -> ExecResult:
-        eng, fl = self.eng, self.eng.fl
-        xs, ys = self._sample_rows(plan)
-        B = plan.slot_rows.shape[0]
         # per-row PRNG keys follow the canonical order too: the key of a
         # participant depends on its (leaf, position) — not on which shard
-        # block the layout put its row in
-        base = jax.random.split(jax.random.key(plan.key_seed), B)
+        # block the layout put its row in. The batched step derives the
+        # keys in-graph from (seed, inv); the sequential oracle keeps the
+        # host-side derivation (bit-identical threefry either way).
         inv = np.empty(B, np.int64)
         inv[plan.order] = np.arange(B)
-        kd = np.asarray(jax.random.key_data(base))[inv]
-        if self.mode == "batched":
-            res = self._execute_batched(plan, xs, ys, kd)
+        if self.mode != "batched":
+            base = jax.random.split(jax.random.key(plan.key_seed), B)
+            kd = np.asarray(jax.random.key_data(base))[inv]
+            return xs, ys, kd
+        return self._stage_buffers(plan, xs, ys, inv.astype(np.int32))
+
+    def _stage_buffers(self, plan: MatchPlan, xs, ys, inv) -> tuple:
+        """Place one round's row buffers on the device(s), execution-ready.
+
+        The transfers (and the shard-local slot-id rewrite) live in the
+        PACK stage, not at dispatch time: under the §⑤ overlap they happen
+        one round ahead, while the previous fused step is still executing —
+        at C = 32 the row-sharded device_put of the (B, steps, batch, d)
+        batches was most of the dispatch-time host cost.
+        """
+        slot_rows = plan.slot_rows
+        if self.n_shards > 1:
+            # shard-local slot ids: row block j only references slots owned
+            # by device j, so the in-step gather never crosses the mesh
+            B = slot_rows.shape[0]
+            shard_of_row = np.arange(B) // self.shard_width
+            slot_rows = slot_rows - (
+                shard_of_row * self.bank.slots_per_shard
+            ).astype(slot_rows.dtype)
+            rsh = row_sharding(self.mesh)
+            ush = NamedSharding(self.mesh, P("cohort"))
+            put = lambda a: jax.device_put(np.asarray(a), rsh)  # noqa: E731
+            upd = jax.device_put(plan.update_slots, ush)
+            seed = jax.device_put(
+                np.int32(plan.key_seed), NamedSharding(self.mesh, P())
+            )
         else:
+            put = jnp.asarray
+            upd = jnp.asarray(plan.update_slots)
+            seed = jnp.asarray(np.int32(plan.key_seed))
+        return (
+            put(slot_rows),
+            put(xs),
+            put(ys),
+            seed,
+            put(inv),
+            put(plan.sizes),
+            put(plan.kept.astype(np.float32)),
+            upd,
+        )
+
+    def execute(self, plan: MatchPlan, packed=None) -> ExecResult:
+        """Stage ②: dispatch the round. Non-blocking in batched mode — the
+        returned ExecResult holds device arrays until stage ③ reads them.
+        `packed` lets the §⑤ scheduler pass buffers packed (and staged on
+        device) a round ahead.
+        """
+        eng, fl = self.eng, self.eng.fl
+        if packed is None:
+            packed = self._timed("pack", self._pack_rows, plan)
+        t0 = time.perf_counter()
+        if self.mode == "batched":
+            res = self._execute_batched(plan, packed)
+        else:
+            xs, ys, kd = packed
             keys = jax.random.wrap_key_data(jnp.asarray(kd))
             res = self._execute_sequential(plan, xs, ys, keys)
+        self.stage_seconds["dispatch"] += time.perf_counter() - t0
         # simulated wall-clock + resource accounting
         for leaf in plan.active:
             slot = self.bank.slot_of[leaf]
@@ -724,39 +879,16 @@ class RoundPipeline:
         )
         return res
 
-    def _execute_batched(self, plan, xs, ys, kd) -> ExecResult:
-        slot_rows = plan.slot_rows
-        if self.n_shards > 1:
-            # shard-local slot ids: row block j only references slots owned
-            # by device j, so the in-step gather never crosses the mesh
-            B = slot_rows.shape[0]
-            shard_of_row = np.arange(B) // self.shard_width
-            slot_rows = slot_rows - (shard_of_row * self.bank.slots_per_shard).astype(
-                slot_rows.dtype
-            )
-            rsh = row_sharding(self.mesh)
-            ush = NamedSharding(self.mesh, P("cohort"))
-            put = lambda a: jax.device_put(np.asarray(a), rsh)  # noqa: E731
-        else:
-            put = jnp.asarray
-            ush = None
+    def _execute_batched(self, plan, staged) -> ExecResult:
         new_p, new_o, sketches, losses = self._exec_step(
-            self.bank.params,
-            self.bank.opt_state,
-            put(slot_rows),
-            put(xs),
-            put(ys),
-            put(kd),
-            put(plan.sizes),
-            put(plan.kept.astype(np.float32)),
-            jnp.asarray(plan.update_slots)
-            if ush is None
-            else jax.device_put(plan.update_slots, ush),
+            self.bank.params, self.bank.opt_state, *staged
         )
         self.exec_dispatches += 1
         self.bank.params = new_p
         self.bank.opt_state = new_o
-        return ExecResult(np.asarray(sketches), np.asarray(losses))
+        # NO host copy here: fetching would block until the step finishes.
+        # ExecResult converts lazily when stage ③ reads the arrays.
+        return ExecResult(sketches, losses)
 
     def _execute_sequential(self, plan, xs, ys, keys) -> ExecResult:
         """Reference oracle: one padded device dispatch PER cohort, host
@@ -803,13 +935,27 @@ class RoundPipeline:
         return ExecResult(sketches, losses)
 
     # ------------------------------------------------------------ stage ③
-    def apply_feedback(self, plan: MatchPlan, res: ExecResult):
+    def apply_feedback(self, plan: MatchPlan, res: ExecResult) -> bool:
+        """Retire a round: clustering feedback + dense-table updates.
+
+        Returns True iff a partition event was applied — the §⑤ scheduler
+        flushes the pipeline then (a stale plan is invalid across a
+        partition). Reading `res.sketches` here is the first (lazy) device
+        fetch of the round's artifacts.
+        """
+        t0 = time.perf_counter()
+        try:
+            return self._apply_feedback(plan, res)
+        finally:
+            self.stage_seconds["feedback"] += time.perf_counter() - t0
+
+    def _apply_feedback(self, plan: MatchPlan, res: ExecResult) -> bool:
         eng, fl, auxo = self.eng, self.eng.fl, self.eng.auxo
         if not auxo.enabled:
-            return
+            return False
         nact = len(plan.active)
         if nact == 0:
-            return
+            return False
         rows_by = [
             np.nonzero(plan.kept & (plan.slot_rows == self.bank.slot_of[leaf]))[0]
             for leaf in plan.active
@@ -856,12 +1002,14 @@ class RoundPipeline:
         results = eng.coordinator.feedback_all(
             plan.active,
             [k.tolist() for k in kept_ids_list],
-            jnp.asarray(fp_batch),
-            jnp.asarray(masks),
+            # host control plane keeps the batches in numpy — no transfer
+            fp_batch if self.host_control else jnp.asarray(fp_batch),
+            masks if self.host_control else jnp.asarray(masks),
             plan.round_idx,
             fl.rounds,
             claimed_list,
             batched=(self.mode == "batched"),
+            backend="host" if self.host_control else "device",
         )
 
         # dense-table reward application + ExploreReward propagation;
@@ -882,11 +1030,13 @@ class RoundPipeline:
             # leaf set mid-loop, so every per-cohort table update collapses
             # into one fancy-indexed block over (kept clients x leaf slots)
             self._apply_rewards_vectorized(results, cur, dists, gamma)
-            return
+            return False
+        any_event = False
         for fb in results:
             ids = np.asarray(fb.client_ids, np.int64)
             if ids.size == 0:
                 if fb.event is not None:
+                    any_event = True
                     self._apply_partition(fb.event, cur)
                 continue
             neg = fb.delta < 0
@@ -910,8 +1060,10 @@ class RoundPipeline:
             }
             self.table.propagate(ids[ok], fb.delta[ok], slot_dist)
             if fb.event is not None:
+                any_event = True
                 self._apply_partition(fb.event, cur)
                 dists = distance_matrix(cur)
+        return any_event
 
     def _apply_rewards_vectorized(self, results, cur: List[str], dists, gamma):
         """Event-free stage-③ table application as a handful of numpy ops.
@@ -957,9 +1109,74 @@ class RoundPipeline:
         cur[i : i + 1] = list(event.children)
 
     # ------------------------------------------------------------ driver
+    def _plan_and_pack(self, r: int) -> Tuple[int, Any, Any]:
+        plan = self._timed("plan", self.plan_round, r)
+        packed = (
+            self._timed("pack", self._pack_rows, plan)
+            if plan is not None
+            else None
+        )
+        return (r, plan, packed)
+
+    def _retire(self) -> bool:
+        """Apply the in-flight round's feedback (True iff it partitioned)."""
+        if self._inflight is None:
+            return False
+        plan, res = self._inflight
+        self._inflight = None
+        return self.apply_feedback(plan, res)
+
+    def flush(self):
+        """Drain the pipeline: retire the in-flight round's feedback.
+
+        Called before evaluation and at end of run so host tables and
+        fingerprints are consistent with the bank models. A partition
+        during the drain discards the staged next-round plan (it was
+        computed against pre-partition tables); otherwise the staged plan
+        survives — its one-round staleness is exactly the steady-state
+        semantics, so an eval-time flush does not perturb the schedule.
+        No-op in synchronous mode and on an empty pipeline.
+        """
+        if self._retire():
+            self._staged = None
+
     def run_round(self, r: int):
-        plan = self.plan_round(r)
-        if plan is None:
+        if not self.overlap:
+            plan = self._timed("plan", self.plan_round, r)
+            if plan is None:
+                return
+            res = self.execute(plan)
+            self.apply_feedback(plan, res)
             return
-        res = self.execute(plan)
-        self.apply_feedback(plan, res)
+        # §⑤ depth-2 overlapped schedule. Host-visible order per call:
+        #   fetch round r-1's sketches/losses (the ONLY device dependency
+        #     of stage ③; this drains the device queue)
+        #   → dispatch round r (plan/buffers staged by the previous call;
+        #     the queue is empty, so the enqueue never blocks — XLA CPU
+        #     caps the multi-device in-flight depth at 1, measured)
+        #   → apply round r-1's feedback        ┐ host-control numpy,
+        #   → plan round r+1 (one-round-stale)  │ all overlapped with the
+        #   → pack + device-stage its buffers   ┘ device executing round r
+        staged, self._staged = self._staged, None
+        prev, self._inflight = self._inflight, None
+        if prev is not None:
+            prev[1].sketches, prev[1].losses  # lazy fetch, before dispatch
+        if staged is not None and staged[0] == r:
+            _, plan, packed = staged
+        else:
+            _, plan, packed = self._plan_and_pack(r)
+        res = self.execute(plan, packed) if plan is not None else None
+        events = prev is not None and self.apply_feedback(*prev)
+        if plan is not None:
+            if events:
+                # pipeline FLUSH: the partition invalidated round r's stale
+                # plan (it trained the pre-partition leaf set one extra
+                # round) — drain it synchronously instead of keeping it in
+                # flight, so the next plan sees fully reseeded tables
+                self.flushes += 1
+                self.apply_feedback(plan, res)
+            else:
+                self._inflight = (plan, res)
+        # stage round r+1 against the current tables: they are missing only
+        # round r's feedback (in flight) — stale by exactly one round
+        self._staged = self._plan_and_pack(r + 1)

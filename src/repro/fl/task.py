@@ -54,9 +54,14 @@ class MLPTask:
             - jnp.take_along_axis(lg, y[:, None].astype(jnp.int32), axis=1)[:, 0]
         )
 
-    def accuracy(self, params, x, y) -> float:
+    def correct_fraction(self, params, x, y) -> jnp.ndarray:
+        """Traceable accuracy (no host round-trip): vmapped by the engine
+        to score many per-client models in one dispatch (ftfa_eval)."""
         pred = jnp.argmax(self.logits(params, x), axis=-1)
-        return float(jnp.mean((pred == y).astype(jnp.float32)))
+        return jnp.mean((pred == y).astype(jnp.float32))
+
+    def accuracy(self, params, x, y) -> float:
+        return float(self.correct_fraction(params, x, y))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,8 +78,11 @@ class TransformerTask:
         l, _ = self.model.loss(params, {"tokens": tokens})
         return l
 
-    def accuracy(self, params, x, y=None) -> float:
-        # next-token accuracy
+    def correct_fraction(self, params, x, y=None) -> jnp.ndarray:
+        # next-token accuracy, traceable (vmapped by ftfa_eval)
         logits, _ = self.model.forward(params, {"tokens": x})
         pred = jnp.argmax(logits[:, :-1], axis=-1)
-        return float(jnp.mean((pred == x[:, 1:]).astype(jnp.float32)))
+        return jnp.mean((pred == x[:, 1:]).astype(jnp.float32))
+
+    def accuracy(self, params, x, y=None) -> float:
+        return float(self.correct_fraction(params, x, y))

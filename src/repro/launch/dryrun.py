@@ -37,6 +37,7 @@ from repro.launch.specs import (
 from repro.launch.steps import (
     StepConfig,
     clustering_init,
+    jit_train_step,
     make_central_train_step,
     make_prefill_step,
     make_serve_step,
@@ -91,11 +92,10 @@ def _compile_one(cfg, cfg0, shape, mesh, policy, step_cfg, seq_shard_cache=False
             fn = make_central_train_step(model, step_cfg, n_clients=TRAIN_CLIENTS)
         else:
             fn = make_train_step(model, step_cfg)
-        jitted = jax.jit(
+        jitted = jit_train_step(
             fn,
             in_shardings=(pshard, oshard, cshard, bshard),
             out_shardings=(pshard, oshard, cshard, None),
-            donate_argnums=(0, 1, 2),
         )
         with mesh:
             lowered = jitted.lower(pshapes, opt, clust, batch)

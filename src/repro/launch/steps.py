@@ -264,6 +264,38 @@ def make_central_train_step(model: Model, step_cfg: StepConfig, n_clients: int =
 
 
 # ---------------------------------------------------------------------------
+# Double-buffer-friendly compilation of a round step
+# ---------------------------------------------------------------------------
+import warnings as _warnings
+
+# donation is a no-op on CPU (the test substrate) and jax warns per call
+_warnings.filterwarnings(
+    "ignore", message="Some donated buffers were not usable"
+)
+
+
+def jit_train_step(step_fn: Callable, *, in_shardings=None, out_shardings=None,
+                   donate: bool = True):
+    """Jit a (params, opt_state, clust_state, batch) round step with the
+    carried state DONATED.
+
+    Async round drivers (the §⑤ depth-2 schedule of fl/pipeline.py, or any
+    dispatch-ahead loop over these SPMD steps) re-dispatch round r+1 while
+    round r's outputs are still referenced on the host; donating the carried
+    buffers keeps that at ONE live copy of params + optimizer + clustering
+    state instead of two. Backends without donation (CPU) ignore it.
+    """
+    kw = {}
+    if in_shardings is not None:
+        kw["in_shardings"] = in_shardings
+    if out_shardings is not None:
+        kw["out_shardings"] = out_shardings
+    if donate:
+        kw["donate_argnums"] = (0, 1, 2)
+    return jax.jit(step_fn, **kw)
+
+
+# ---------------------------------------------------------------------------
 # Prefill / decode steps (serving)
 # ---------------------------------------------------------------------------
 def make_prefill_step(model: Model, step_cfg: StepConfig) -> Callable:

@@ -1,0 +1,187 @@
+"""§⑤ round pipelining: async equivalence, partition flush, compile-once.
+
+The depth-2 overlapped schedule (FLConfig.round_overlap = 1) must be a pure
+reordering: it equals a SYNCHRONOUS run that is fed the same one-round-stale
+plans bit-for-bit — the async dispatch / lazy-fetch machinery may not change
+a single ulp. The oracle below drives the pipeline primitives in the stale
+order with hard synchronization barriers after every dispatch.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data import make_population
+from repro.fl import AuxoConfig, AuxoEngine, FLConfig
+from repro.fl.task import MLPTask
+
+
+def _scenario(seed=5, rounds=30):
+    pop = make_population(
+        n_clients=300, n_groups=4, group_sep=0.0, dirichlet=3.0,
+        label_conflict=1.0, seed=seed,
+    )
+    task = MLPTask(dim=pop.dim, n_classes=pop.n_classes)
+    fl = FLConfig(
+        rounds=rounds, participants_per_round=60, eval_every=rounds - 1,
+        use_availability=False, seed=seed,
+    )
+    auxo = AuxoConfig(
+        d_sketch=64, cluster_k=2, max_cohorts=3, clustering_start_frac=0.03,
+        partition_start_frac=0.08, partition_end_frac=0.9, min_members=6,
+        margin_threshold=0.35,
+    )
+    return task, pop, fl, auxo
+
+
+def _run_stale_sync(eng: AuxoEngine, rounds: int) -> AuxoEngine:
+    """Reference oracle: the §⑤ host schedule — plan round r BEFORE round
+    r-1's feedback is applied (one-round-stale tables), flush on partition
+    — but with every device dispatch fully synchronized before the next
+    host step. Identical host-RNG and table-op order to run_round's
+    overlapped path; only the async machinery differs."""
+    p = eng.pipeline
+    assert p.overlap == 0
+    p.host_control = True  # same control-plane math as the overlapped path
+    staged = None
+    inflight = None
+    for r in range(rounds):
+        prev, inflight = inflight, None
+        if prev is not None:
+            prev[1].sketches, prev[1].losses  # eager fetch
+        if staged is not None and staged[0] == r:
+            _, plan, packed = staged
+        else:
+            _, plan, packed = p._plan_and_pack(r)
+        staged = None
+        res = p.execute(plan, packed) if plan is not None else None
+        # hard barrier: the overlapped path must not depend on laziness
+        jax.block_until_ready(p.bank.params)
+        if res is not None:
+            res.sketches, res.losses
+        events = prev is not None and p.apply_feedback(*prev)
+        if plan is not None:
+            if events:
+                p.apply_feedback(plan, res)  # flush: drain the stale round
+            else:
+                inflight = (plan, res)
+        staged = p._plan_and_pack(r + 1)
+    if inflight is not None:
+        p.apply_feedback(*inflight)
+    return eng
+
+
+def test_overlap_matches_stale_sync_bit_for_bit():
+    task, pop, fl, auxo = _scenario()
+    eng_a = AuxoEngine(task, pop, dataclasses.replace(fl, round_overlap=1), auxo)
+    for r in range(fl.rounds):
+        eng_a.step(r)
+    eng_a.pipeline.flush()
+
+    eng_b = _run_stale_sync(AuxoEngine(task, pop, fl, auxo), fl.rounds)
+
+    hist_a = [(p.parent, p.round_idx) for p in eng_a.coordinator.partitions]
+    hist_b = [(p.parent, p.round_idx) for p in eng_b.coordinator.partitions]
+    assert len(hist_a) >= 1, "scenario must partition to exercise the flush"
+    assert hist_a == hist_b
+    leaves = eng_a.coordinator.tree.leaves()
+    assert leaves == eng_b.coordinator.tree.leaves()
+    for cid in leaves:
+        for a, b in zip(
+            jax.tree.leaves(eng_a.pipeline.bank.params_of(cid)),
+            jax.tree.leaves(eng_b.pipeline.bank.params_of(cid)),
+        ):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # host soft state is bit-equal too (same table-op order)
+    np.testing.assert_array_equal(
+        eng_a.pipeline.table.reward, eng_b.pipeline.table.reward
+    )
+    np.testing.assert_array_equal(eng_a.fingerprint, eng_b.fingerprint)
+    # invariants under overlap: one fused dispatch per round, one executable
+    assert eng_a.pipeline.exec_dispatches == fl.rounds
+    assert eng_a.pipeline._exec_step._cache_size() == 1
+    # every partition flushed the pipeline (it was discovered while the
+    # next round was already in flight)
+    assert eng_a.pipeline.flushes >= 1
+
+
+def test_partition_mid_pipeline_flush_drains_and_refills():
+    task, pop, fl, auxo = _scenario()
+    eng = AuxoEngine(task, pop, dataclasses.replace(fl, round_overlap=1), auxo)
+    p = eng.pipeline
+    seen_flush = 0
+    for r in range(fl.rounds):
+        eng.step(r)
+        if p.flushes > seen_flush:
+            seen_flush = p.flushes
+            # drained: the stale round retired synchronously, nothing left
+            # in flight; the next round was re-staged against the freshly
+            # reseeded (post-partition) tables
+            assert p._inflight is None
+        elif r > 0 and p.flushes == seen_flush:
+            assert p._inflight is not None  # steady state keeps depth 2
+        assert p._staged is not None and p._staged[0] == r + 1
+    assert seen_flush >= 1
+    p.flush()
+    assert p._inflight is None
+    # tree/bank consistency after flushes: every leaf owns a bank slot and
+    # partitioned parents are internal nodes
+    leaves = eng.coordinator.tree.leaves()
+    for leaf in leaves:
+        assert leaf in p.bank.slot_of
+    for ev in eng.coordinator.partitions:
+        assert ev.parent not in leaves
+    assert p._exec_step._cache_size() == 1
+
+
+def test_probe_cache_and_vectorized_serving_consistency():
+    task, pop, fl, auxo = _scenario(rounds=20)
+    eng = AuxoEngine(task, pop, dataclasses.replace(fl, round_overlap=1), auxo)
+    for r in range(20):
+        eng.step(r)
+    eng.pipeline.flush()
+
+    # batched serving equals the scalar per-client route (same code path,
+    # same probe cache)
+    serving = eng.serving_cohorts()
+    sample = list(range(0, pop.n_clients, 37))
+    assert [serving[c] for c in sample] == [eng.client_cohort(c) for c in sample]
+
+    never = [c for c in range(pop.n_clients) if not eng.fp_seen[c]]
+    if never and len(eng.coordinator.identity) >= 2 and eng.global_mu_seen:
+        calls = []
+        orig = eng._vmapped_probe_train
+        eng._vmapped_probe_train = lambda *a: (calls.append(1), orig(*a))[1]
+        c = never[0]
+        eng.client_cohort(c)
+        n1 = len(calls)
+        eng.client_cohort(c)  # cache hit: no new probe dispatch
+        assert len(calls) == n1
+        assert eng._probe_cache  # populated
+        # a partition invalidates the cache
+        eng.coordinator.partitions.append(eng.coordinator.partitions[0])
+        eng.client_cohort(c)
+        assert len(calls) > n1
+        eng.coordinator.partitions.pop()
+
+
+def test_flush_is_noop_on_sync_engine():
+    task, pop, fl, auxo = _scenario(rounds=4)
+    eng = AuxoEngine(task, pop, fl, auxo)
+    for r in range(4):
+        eng.step(r)
+        assert eng.pipeline._inflight is None and eng.pipeline._staged is None
+    d = eng.pipeline.exec_dispatches
+    eng.pipeline.flush()
+    assert eng.pipeline.exec_dispatches == d
+
+
+def test_overlap_requires_batched_mode():
+    task, pop, fl, auxo = _scenario(rounds=2)
+    with pytest.raises(AssertionError):
+        AuxoEngine(
+            task, pop,
+            dataclasses.replace(fl, round_overlap=1, execution="sequential"),
+            auxo,
+        )

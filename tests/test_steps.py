@@ -9,6 +9,7 @@ from repro.launch.steps import (
     StepConfig,
     clustering_init,
     clustering_update,
+    jit_train_step,
     make_central_train_step,
     make_prefill_step,
     make_serve_step,
@@ -30,7 +31,9 @@ def _train_batch(key, cfg, C=4, m=4, S=16):
 
 def test_federated_train_step_improves_loss(small_model):
     sc = StepConfig(local_steps=2, client_lr=0.05, server_lr=0.05, d_sketch=32)
-    step = jax.jit(make_train_step(small_model, sc))
+    # donation-aware compile: the carried state is reassigned each
+    # iteration, exactly the double-buffered driver pattern it serves
+    step = jit_train_step(make_train_step(small_model, sc))
     key = jax.random.key(0)
     params = small_model.init(key)
     opt = yogi_init(params)

@@ -1,10 +1,18 @@
 #!/usr/bin/env python
-"""Fail on broken intra-repo links in the markdown docs.
+"""Fail on broken intra-repo links AND section anchors in the markdown docs.
 
 Checks every ``[text](target)`` in the given files (default: README.md,
-ARCHITECTURE.md, ROADMAP.md) whose target is not an external URL or a
-pure #anchor: the referenced path must exist relative to the file (or the
-repo root). Inline/backtick code spans are ignored.
+ARCHITECTURE.md, ROADMAP.md):
+
+- path targets (not external URLs) must exist relative to the file or the
+  repo root;
+- ``#anchor`` targets — both pure in-page anchors and ``path.md#anchor`` —
+  must match a heading in the target document, using GitHub's slug rule
+  (lowercase; spaces to hyphens; drop everything that is not an ASCII
+  letter/digit, hyphen, or underscore; duplicate headings get ``-N``
+  suffixes, which are accepted).
+
+Inline/backtick code spans and fenced blocks are ignored.
 
 Usage:  python tools/check_links.py [files...]
 """
@@ -19,24 +27,77 @@ DEFAULT = ["README.md", "ARCHITECTURE.md", "ROADMAP.md"]
 LINK = re.compile(r"\[[^\]]+\]\(([^)\s]+)\)")
 CODE_SPAN = re.compile(r"`[^`]*`")
 FENCE = re.compile(r"^```", re.M)
+HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.M)
+INLINE_LINK = re.compile(r"\[([^\]]*)\]\([^)]*\)")
+
+
+def strip_fences(text: str) -> str:
+    parts = FENCE.split(text)
+    return "".join(p for i, p in enumerate(parts) if i % 2 == 0)
 
 
 def strip_code(text: str) -> str:
-    parts = FENCE.split(text)
-    kept = "".join(p for i, p in enumerate(parts) if i % 2 == 0)
-    return CODE_SPAN.sub("", kept)
+    return CODE_SPAN.sub("", strip_fences(text))
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug for a heading line."""
+    h = heading.strip()
+    h = INLINE_LINK.sub(r"\1", h)  # links keep their text
+    h = h.replace("`", "")  # code spans keep their text
+    # NOTE: no emphasis stripping — `*` drops in the filter below anyway,
+    # and a [*_]-pair regex would eat snake_case underscores, which GitHub
+    # preserves in anchors
+    out = []
+    for ch in h.lower():
+        if ch.isascii() and (ch.isalnum() or ch in "-_"):
+            out.append(ch)
+        elif ch == " ":
+            out.append("-")
+        # anything else (punctuation, unicode symbols like §/④) drops
+    return "".join(out)
+
+
+def anchors_of(path: Path) -> set:
+    """All valid anchor slugs of a markdown file (with -N duplicates)."""
+    slugs: list = [slugify(h) for h in HEADING.findall(strip_fences(path.read_text()))]
+    out, seen = set(), {}
+    for s in slugs:
+        n = seen.get(s, 0)
+        out.add(s if n == 0 else f"{s}-{n}")
+        seen[s] = n + 1
+    return out
+
+
+def _rel(path: Path) -> str:
+    try:
+        return str(path.relative_to(REPO))
+    except ValueError:
+        return str(path)
 
 
 def check(path: Path) -> list:
     broken = []
     for target in LINK.findall(strip_code(path.read_text())):
-        if target.startswith(("http://", "https://", "mailto:", "#")):
+        if target.startswith(("http://", "https://", "mailto:")):
             continue
-        ref = target.split("#")[0]
-        if not ref:
-            continue
-        if not ((path.parent / ref).exists() or (REPO / ref).exists()):
-            broken.append((str(path.relative_to(REPO)), target))
+        ref, _, anchor = target.partition("#")
+        if ref:
+            dest = (
+                path.parent / ref
+                if (path.parent / ref).exists()
+                else (REPO / ref)
+            )
+            if not dest.exists():
+                broken.append((_rel(path), target))
+                continue
+        else:
+            dest = path
+        if anchor and dest.suffix == ".md":
+            if anchor not in anchors_of(dest):
+                broken.append(
+                    (_rel(path), f"{target} (missing anchor)")
+                )
     return broken
 
 
@@ -51,7 +112,7 @@ def main() -> int:
     for where, target in broken:
         print(f"BROKEN LINK in {where}: {target}")
     if not broken:
-        print(f"ok: {len(files)} files, no broken intra-repo links")
+        print(f"ok: {len(files)} files, no broken intra-repo links or anchors")
     return 1 if broken else 0
 
 
