@@ -1,0 +1,208 @@
+"""Population-plane scale benchmark: N = 10k → 1M clients, O(active) rounds.
+
+The §⑥ population plane (repro/scale/) claims that per-round host cost and
+resident client-state bytes depend on the ACTIVE SET (participants +
+churned clients), not on the population size N. This benchmark drives one
+round's worth of population-plane work — streaming availability sampling,
+ε-greedy matching over the affinity view, straggler-drop selection,
+reward/fingerprint feedback through gather/scatter, a churn step, and one
+mid-run partition reseed — at a FIXED participant budget while N sweeps
+10k / 100k / 1M, and asserts both scalings:
+
+- host ms/round at N = 1M within 2x of N = 100k (time tripwire);
+- store bytes at N = 1M within 2x of N = 100k (memory tripwire) — a dense
+  control plane is ~1 KB/client, i.e. ~1 GB at 1M, reported for contrast.
+
+The model plane is deliberately absent: rounds here are availability +
+matching + soft-state feedback only — exactly the paths that were O(N) in
+the dense engine (benchmarks/round_latency.py and round_overlap.py cover
+the device side). The full engine integration is exercised bit-for-bit at
+small N by tests/test_population_scale.py.
+
+Writes BENCH_population_scale.json at the repo root unless --smoke, which
+runs the N = 100k vs 1M pair for a few rounds and fails CI if resident
+client-state bytes scale with N instead of the active set.
+
+Usage:  python benchmarks/population_scale.py [--budget 1000] [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.data.availability import DeviceSpeeds  # noqa: E402
+from repro.scale import (  # noqa: E402
+    ChurnStream,
+    StreamingAvailability,
+    make_client_store,
+)
+from repro.scale.store import ChunkedAffinityTable  # noqa: E402
+
+CAPACITY = 16  # bank slots (max_cohorts=8, k=2 → 15, padded)
+D_SKETCH = 64
+N_LEAVES = 8
+GAMMA = 0.2
+EPS = 0.2
+
+
+def run_rounds(n_clients: int, budget: int, rounds: int, seed: int,
+               churn_per_round: float = 100.0):
+    """Drive `rounds` population-plane rounds; returns per-round times + stats.
+
+    The churn budget is FIXED per round (not ∝ N): the benchmark measures
+    how cost scales with N at constant activity, so every workload knob is
+    held constant across the sweep.
+    """
+    store = make_client_store(n_clients, D_SKETCH, CAPACITY)
+    table = ChunkedAffinityTable(store)
+    sampler = StreamingAvailability(n_clients, seed=seed, mode="chunked")
+    speeds = DeviceSpeeds(n_clients, sigma=0.6, seed=seed)
+    churn = ChurnStream(
+        n_clients,
+        depart_rate=churn_per_round / n_clients,
+        return_rate=0.1,
+        seed=seed,
+    )
+    rng = np.random.default_rng(seed)
+    slots = np.arange(N_LEAVES, dtype=np.int64)
+    times, actives = [], []
+    for r in range(rounds):
+        t0 = time.perf_counter()
+        # ① streaming availability: a candidate pool around the budget,
+        # never the full active set
+        avail, n_avail = sampler.sample(r, 4 * budget, rng)
+        if store.n_departed:
+            avail = avail[store.alive(avail)]
+        take = min(budget, avail.size)
+        part = rng.choice(avail, size=take, replace=False)
+        # ② ε-greedy matching over the affinity view (dense rows for the
+        # round's participants only)
+        rew_blk, known = table.match_view(part, slots)
+        rew = np.where(known, rew_blk, -np.inf)
+        rand = (~known.any(1)) | (rng.random(take) < EPS)
+        want = np.where(rand, rng.integers(N_LEAVES, size=take), rew.argmax(1))
+        # ③ over-commitment straggler drop (vectorized round_duration)
+        kept_ids, _dur = speeds.round_duration(part, 160, overcommit=1.25)
+        order = np.argsort(part)
+        pos = order[np.searchsorted(part[order], kept_ids)]
+        own = slots[want[pos]]
+        # ④ feedback: reward EMA + propagation + fingerprint EMA, one
+        # gather → block update → scatter (the §③ fast-path shape)
+        delta = rng.normal(0.0, 1.0, kept_ids.size).astype(np.float32)
+        row = np.arange(kept_ids.size)
+        rw, kn, cl = table.gather_rows(kept_ids)
+        rw[row, own] = GAMMA * delta + (1.0 - GAMMA) * rw[row, own]
+        cl[row, own] = rng.integers(0, 2, kept_ids.size)
+        w = np.repeat(delta[:, None] / 3.0, N_LEAVES, axis=1)
+        w[row, want[pos]] = 0.0
+        rw[:, slots] += w.astype(np.float32)
+        kn[:, slots] = True
+        table.scatter_rows(kept_ids, rw, kn, cl)
+        fp = store.gather("fingerprint", kept_ids)
+        new_fp = rng.normal(size=fp.shape).astype(np.float32)
+        store.scatter("fingerprint", kept_ids, 0.6 * fp + 0.4 * new_fp)
+        store.scatter("fp_seen", kept_ids, True)
+        # ⑤ churn (fixed expected volume per round)
+        dep, arr = churn.step(r)
+        store.depart(dep)
+        store.arrive(arr)
+        if r == rounds // 2:
+            # partition reseed: rewrites only materialized chunks
+            table.seed_children(0, [1, 2])
+        times.append(time.perf_counter() - t0)
+        actives.append(n_avail)
+    # drop the first quarter: row/chunk allocation concentrates there (the
+    # steady state is what the O(active) claim is about)
+    steady = times[max(1, rounds // 4):]
+    return {
+        "n_clients": n_clients,
+        "rounds": rounds,
+        "budget": budget,
+        "host_ms_per_round": float(np.median(steady) * 1e3),
+        "host_ms_p90": float(np.quantile(steady, 0.9) * 1e3),
+        "mean_available": float(np.mean(actives)),
+        "touched_rows": int(store.n_rows),
+        "departed": int(store.n_departed),
+        "store_mbytes": store.nbytes / 1e6,
+        "index_mbytes": sum(p.nbytes for p in store._pages.values()) / 1e6,
+        "dense_mbytes_equiv": n_clients * store.row_nbytes / 1e6,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sizes", type=int, nargs="+",
+                    default=[10_000, 100_000, 1_000_000])
+    ap.add_argument("--budget", type=int, default=1000)
+    ap.add_argument("--rounds", type=int, default=40)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="CI mode: N = 100k vs 1M, few rounds, memory tripwire",
+    )
+    args = ap.parse_args()
+    if args.smoke:
+        args.sizes, args.rounds = [100_000, 1_000_000], 8
+
+    sweep = []
+    for n in args.sizes:
+        row = run_rounds(n, args.budget, args.rounds, args.seed)
+        sweep.append(row)
+        print(
+            f"N={n:>9,}  {row['host_ms_per_round']:7.2f} ms/round  "
+            f"store {row['store_mbytes']:7.2f} MB "
+            f"(dense would be {row['dense_mbytes_equiv']:8.1f} MB)  "
+            f"touched {row['touched_rows']:,} rows, "
+            f"~{row['mean_available']:,.0f} available/round"
+        )
+
+    by_n = {row["n_clients"]: row for row in sweep}
+    big, mid = by_n.get(1_000_000), by_n.get(100_000)
+    if big and mid:
+        t_ratio = big["host_ms_per_round"] / mid["host_ms_per_round"]
+        b_ratio = big["store_mbytes"] / mid["store_mbytes"]
+        print(f"1M vs 100k: time x{t_ratio:.2f}, bytes x{b_ratio:.2f}")
+        # memory tripwire: client-state bytes must track the active set.
+        # A dense control plane would make this ratio ~10x.
+        assert b_ratio <= 2.0, (
+            f"resident client-state bytes scale with N (x{b_ratio:.2f}), "
+            "not with the active set"
+        )
+        assert big["store_mbytes"] < 0.1 * big["dense_mbytes_equiv"], (
+            big["store_mbytes"], big["dense_mbytes_equiv"])
+        # time tripwire (slack for shared CI cores in smoke mode)
+        t_bound = 3.0 if args.smoke else 2.0
+        assert t_ratio <= t_bound, (
+            f"host ms/round scales with N (x{t_ratio:.2f} > {t_bound}x)"
+        )
+
+    if args.smoke:
+        print("smoke OK: host time + client-state bytes track the active "
+              "set, not N")
+        return
+
+    out = {
+        "benchmark": "population_scale",
+        "participant_budget": args.budget,
+        "rounds_timed": args.rounds,
+        "churn_per_round": 100.0,
+        "sweep": sweep,
+    }
+    if big and mid:
+        out["time_ratio_1m_vs_100k"] = t_ratio
+        out["bytes_ratio_1m_vs_100k"] = b_ratio
+    path = Path(__file__).resolve().parent.parent / "BENCH_population_scale.json"
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(json.dumps({k: v for k, v in out.items() if k != "sweep"}, indent=2))
+
+
+if __name__ == "__main__":
+    main()

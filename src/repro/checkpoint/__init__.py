@@ -5,6 +5,16 @@ dependency, works for params, optimizer state, and clustering state. The
 coordinator's own soft state has a separate pickle checkpoint
 (repro.core.coordinator.CohortCoordinator.checkpoint).
 """
-from repro.checkpoint.npz import load_pytree, save_pytree
+from repro.checkpoint.npz import (
+    load_population_store,
+    load_pytree,
+    save_population_store,
+    save_pytree,
+)
 
-__all__ = ["save_pytree", "load_pytree"]
+__all__ = [
+    "save_pytree",
+    "load_pytree",
+    "save_population_store",
+    "load_population_store",
+]

@@ -1,4 +1,12 @@
-"""Flat-keyed npz pytree checkpointing."""
+"""Flat-keyed npz pytree checkpointing (+ chunked PopulationStore state).
+
+``save_pytree``/``load_pytree`` cover model/optimizer pytrees (the
+CohortBank's stacked leaves). ``save_population_store`` /
+``load_population_store`` cover the §⑥ population plane: each field's
+materialized chunks stack into one array, the per-chunk owner maps ride
+along, and the paged id→row index is REBUILT from the owners on load — the
+checkpoint stays O(touched clients), like the store itself.
+"""
 from __future__ import annotations
 
 from pathlib import Path
@@ -7,6 +15,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.scale.store import FieldSpec, PopulationStore
 
 
 def save_pytree(path: str | Path, tree: Any):
@@ -31,3 +41,69 @@ def load_pytree(path: str | Path, like: Any) -> Any:
     return jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(like), leaves
     )
+
+
+def save_population_store(path: str | Path, store: PopulationStore):
+    """Checkpoint a chunked PopulationStore: chunk arrays + id index."""
+    arrays = {
+        "meta:scalars": np.array(
+            [store.n_base, store.n_total, store.n_rows, store.chunk_rows,
+             store.n_departed],
+            np.int64,
+        ),
+        "meta:owner": (
+            np.stack(store._owner)
+            if store._owner
+            else np.zeros((0, store.chunk_rows), np.int64)
+        ),
+    }
+    for name in store.field_names:
+        f = store.spec(name)
+        chunks = store.chunks(name)
+        arrays[f"chunk:{name}"] = (
+            np.stack(chunks)
+            if chunks
+            else np.zeros((0, store.chunk_rows) + f.shape, f.dtype)
+        )
+        arrays[f"default:{name}"] = np.asarray(f.default, f.dtype)
+    np.savez(path, **arrays)
+
+
+def load_population_store(path: str | Path) -> PopulationStore:
+    """Restore a PopulationStore; the paged id→row index is rebuilt from
+    the per-chunk owner maps (rows keep their exact allocation order)."""
+    data = np.load(path, allow_pickle=False)
+    n_base, n_total, n_rows, chunk_rows, n_departed = data["meta:scalars"]
+    fields = []
+    for key in data.files:
+        if not key.startswith("chunk:"):
+            continue
+        name = key[len("chunk:"):]
+        arr = data[key]
+        fields.append(
+            FieldSpec(name, tuple(arr.shape[2:]), arr.dtype,
+                      data[f"default:{name}"][()])
+        )
+    store = PopulationStore(fields, n_clients=int(n_base),
+                            chunk_rows=int(chunk_rows))
+    store.n_total = int(n_total)
+    store.n_rows = int(n_rows)
+    store.n_departed = int(n_departed)
+    owner = data["meta:owner"]
+    store._owner = [owner[c].copy() for c in range(owner.shape[0])]
+    for f in fields:
+        arr = data[f"chunk:{f.name}"]
+        store._chunks[f.name] = [arr[c].copy() for c in range(arr.shape[0])]
+    for c, own in enumerate(store._owner):  # rebuild the paged index
+        m = own >= 0
+        ids = own[m]
+        rows = c * store.chunk_rows + np.flatnonzero(m)
+        pg = ids >> store.PAGE_BITS
+        off = ids & ((1 << store.PAGE_BITS) - 1)
+        for p in np.unique(pg):
+            page = store._pages.setdefault(
+                int(p), np.full(1 << store.PAGE_BITS, -1, np.int32)
+            )
+            sel = pg == p
+            page[off[sel]] = rows[sel]
+    return store

@@ -9,7 +9,7 @@ keep the fastest P.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import Optional, Sequence
 
 import numpy as np
 
@@ -29,8 +29,23 @@ class AvailabilityTrace:
         self.propensity = rng.lognormal(0.0, 0.8, self.n_clients)
         self.propensity /= self.propensity.mean()
 
-    def available(self, round_idx: int, rng: np.random.Generator) -> np.ndarray:
-        """Returns the client ids available for this round."""
+    def round_rng(self, round_idx: int) -> np.random.Generator:
+        """Seeded per-round substream: the round's draws depend only on
+        (trace seed, round index), never on how many draws other rounds —
+        or other components sharing a generator — consumed before."""
+        return np.random.default_rng((self.seed, 0xA7A11, round_idx))
+
+    def available(
+        self, round_idx: int, rng: Optional[np.random.Generator] = None
+    ) -> np.ndarray:
+        """Returns the client ids available for this round.
+
+        Pass an explicit generator to draw from a shared stream (the
+        engine's legacy behavior); omit it for the reproducible per-round
+        substream (``round_rng``).
+        """
+        if rng is None:
+            rng = self.round_rng(round_idx)
         t = 2 * np.pi * round_idx / self.period
         rate = self.base_rate * (1 + self.diurnal_amp * np.sin(t + self.phase))
         rate = np.clip(rate * self.propensity, 0.0, 1.0)
@@ -52,7 +67,7 @@ class DeviceSpeeds:
     def round_duration(
         self,
         participants: Sequence[int],
-        samples: Sequence[int],
+        samples,
         overcommit: float = 1.25,
     ):
         """Simulated round wall-clock with over-commitment straggler drop.
@@ -60,11 +75,12 @@ class DeviceSpeeds:
         Returns (kept participant ids, duration). The slowest
         (overcommit-1)/overcommit fraction are dropped (their updates are
         discarded, as in [10]), so duration = slowest *kept* participant.
+        ``samples`` may be a per-participant sequence or one scalar; the
+        whole computation is vectorized (no per-participant python loop).
         """
-        lat = np.array([self.speed[c] * max(s, 1) for c, s in zip(participants, samples)])
-        keep_n = max(1, int(round(len(participants) / overcommit)))
-        order = np.argsort(lat)
-        kept_idx = order[:keep_n]
-        kept = [participants[i] for i in kept_idx]
+        part = np.asarray(participants, np.int64)
+        lat = self.speed[part] * np.maximum(np.asarray(samples, np.float64), 1.0)
+        keep_n = max(1, int(round(part.size / overcommit)))
+        kept_idx = np.argsort(lat)[:keep_n]
         duration = float(lat[kept_idx].max()) if keep_n else 0.0
-        return kept, duration
+        return part[kept_idx], duration

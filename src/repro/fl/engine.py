@@ -42,7 +42,14 @@ from repro.data.availability import AvailabilityTrace, DeviceSpeeds
 from repro.data.datasets import FederatedClassification
 from repro.fl.algorithms import make_server_opt
 from repro.fl.client import local_train
-from repro.fl.pipeline import RoundPipeline
+from repro.fl.pipeline import RoundPipeline, table_capacity
+from repro.scale import (
+    ClientField,
+    DictProbeCache,
+    StoreProbeCache,
+    StreamingAvailability,
+    make_client_store,
+)
 
 
 @dataclasses.dataclass
@@ -90,6 +97,18 @@ class FLConfig:
     # most ONE kept row per round (asserted in MatchPlan); opt in to
     # multi-cohort membership explicitly before writing such a policy.
     allow_cross_cohort_duplicates: bool = False
+    # §⑥ population plane: keep per-client soft state (affinity records,
+    # fingerprint EMAs, probe cache, churn flags) in a chunked
+    # PopulationStore instead of dense (N, ·) arrays — memory and
+    # partition-reseed cost scale with the TOUCHED client set, and churn
+    # (AuxoEngine.apply_churn / an attached ChurnStream) becomes possible.
+    # Small-N runs are bit-for-bit identical to the dense path.
+    population_store: bool = False
+    # availability backend under population_store: "compat" = the exact
+    # dense per-client Bernoulli draw (bit-equal to AvailabilityTrace);
+    # "chunked" = per-chunk Poisson thinning, O(budget + N/chunk) per
+    # round — the million-client mode (see repro/scale/availability.py).
+    availability_mode: str = "compat"
     # resilience knobs (§7.5)
     corrupt_frac: float = 0.0
     dp_clip: float = 0.0
@@ -203,7 +222,22 @@ class AuxoEngine:
         else:
             strat = "full_proj" if self.auxo.sketch_strategy == "auto" else self.auxo.sketch_strategy
             self.sketcher = GradientSketcher(d_sketch=self.auxo.d_sketch, strategy=strat)
-        self.trace = AvailabilityTrace(population.n_clients, seed=fl.seed)
+        # §⑥ population plane: chunked client-state store + streaming
+        # availability (compat mode = bit-equal dense draws). Dense mode
+        # keeps plain numpy arrays — the facades below index identically.
+        if fl.population_store:
+            self.store = make_client_store(
+                population.n_clients,
+                self.auxo.d_sketch,
+                table_capacity(fl, self.auxo),
+            )
+            self.trace = StreamingAvailability(
+                population.n_clients, seed=fl.seed, mode=fl.availability_mode
+            )
+        else:
+            self.store = None
+            self.trace = AvailabilityTrace(population.n_clients, seed=fl.seed)
+        self.churn = None  # optional ChurnStream, applied per step()
         self.speeds = DeviceSpeeds(population.n_clients, sigma=fl.speed_sigma, seed=fl.seed)
         n_corrupt = int(fl.corrupt_frac * population.n_clients)
         self.corrupted = set(self.rng.choice(population.n_clients, n_corrupt, replace=False).tolist()) if n_corrupt else set()
@@ -213,10 +247,17 @@ class AuxoEngine:
         # per-round sketches. Lives with the client (soft state, §5.1);
         # denoises single-round sketches so clustering/affinity work on a
         # stable signal. fp_beta is the EMA weight of the new round.
-        self.fingerprint = np.zeros((population.n_clients, self.auxo.d_sketch), np.float32)
-        self.fp_seen = np.zeros(population.n_clients, bool)
+        if self.store is not None:
+            self.fingerprint = ClientField(self.store, "fingerprint")
+            self.fp_seen = ClientField(self.store, "fp_seen")
+            self.neg_streak = ClientField(self.store, "neg_streak")
+        else:
+            self.fingerprint = np.zeros(
+                (population.n_clients, self.auxo.d_sketch), np.float32
+            )
+            self.fp_seen = np.zeros(population.n_clients, bool)
+            self.neg_streak = np.zeros(population.n_clients, np.int32)
         self.fp_beta = 0.4
-        self.neg_streak = np.zeros(population.n_clients, np.int32)
         # cross-cohort sketch mean EMA: fingerprints are centered against a
         # GLOBAL reference (not the training cohort's mean) so they remain
         # comparable to the root prototypes after cohorts specialize.
@@ -250,7 +291,9 @@ class AuxoEngine:
         # serve-time probe fingerprints, cached across evaluate calls and
         # invalidated when the cohort tree partitions (the root model the
         # probes train against and the identity targets shift then)
-        self._probe_cache: Dict[int, np.ndarray] = {}
+        self._probe_cache = (
+            StoreProbeCache(self.store) if self.store is not None else DictProbeCache()
+        )
         self._probe_cache_key = -1
         self.pipeline = RoundPipeline(self, mode=fl.execution)
 
@@ -282,7 +325,7 @@ class AuxoEngine:
         slot = self.pipeline.bank.slot_of.get(cohort_id)
         if slot is None:
             return -1
-        return int(self.pipeline.table.cluster_idx[c, slot])
+        return self.pipeline.table.cluster_at(c, slot)
 
     # ------------------------------------------------------------------ API
     def run(self) -> List[Dict[str, Any]]:
@@ -297,7 +340,26 @@ class AuxoEngine:
     # ------------------------------------------------------------ one round
     def step(self, r: int):
         """One global round: MatchPlan → BatchedExecution → FeedbackBatch."""
+        if self.churn is not None:
+            departures, arrivals = self.churn.step(r)
+            self.apply_churn(departures, arrivals)
         self.pipeline.run_round(r)
+
+    # ------------------------------------------------------------ §⑥ churn
+    def apply_churn(self, departures=(), arrivals=()):
+        """Dynamic population: departures lose ALL server-held soft state
+        (affinity records, fingerprint EMA, probe cache — the §5.2
+        soft-state-loss semantics) and leave the sampling population;
+        arrivals (or re-arrivals) join cold — no fingerprint, so serving
+        routes them through the probe-fingerprint path. With round overlap
+        a departure can lag one in-flight round, like any staleness in the
+        §⑤ schedule. Blacklist entries are identity-level and survive.
+        """
+        assert self.store is not None, (
+            "churn requires FLConfig.population_store=True"
+        )
+        self.store.depart(np.asarray(departures, np.int64))
+        self.store.arrive(np.asarray(arrivals, np.int64))
 
     def _apply_partition(self, event: PartitionEvent):
         """Warm-start children + seed child rewards (kept for direct use)."""
@@ -322,9 +384,7 @@ class AuxoEngine:
             self._probe_cache.clear()
             self._probe_cache_key = key
         cs = np.asarray(cs, np.int64)
-        miss = np.array(
-            [c for c in cs if int(c) not in self._probe_cache], np.int64
-        )
+        miss = self._probe_cache.missing(cs)
         if miss.size:
             xs, ys = [], []
             for c in miss:  # cheap host draws; the device work is batched
@@ -344,9 +404,8 @@ class AuxoEngine:
             sk = np.asarray(self._vmapped_sketch(deltas))
             ctr = sk - self.global_mu[None, :]
             ctr /= np.linalg.norm(ctr, axis=1, keepdims=True) + 1e-9
-            for j, c in enumerate(miss):
-                self._probe_cache[int(c)] = ctr[j].astype(np.float32)
-        return np.stack([self._probe_cache[int(c)] for c in cs])
+            self._probe_cache.put(miss, ctr.astype(np.float32))
+        return self._probe_cache.get_many(cs)
 
     def _probe_fingerprint(self, c: int) -> np.ndarray:
         """Single-client view of `_probe_fingerprints` (shares its cache)."""

@@ -94,12 +94,35 @@ from repro.fl.client import local_train
 from repro.kernels import ops as kops
 from repro.launch.mesh import cohort_size, make_cohort_mesh
 from repro.launch.sharding import bank_shardings, row_sharding
+from repro.scale.store import ChunkedAffinityTable
 
 
 def _next_pow2(n: int) -> int:
     """Smallest power of two >= n (n >= 1). Used to bucket data-dependent
     batch widths so jit caches stay small instead of recompiling per round."""
     return 1 << max(0, int(n) - 1).bit_length()
+
+
+def bank_capacity(auxo) -> Tuple[int, int]:
+    """(bank slot capacity, max leaf count) implied by the partition policy.
+
+    Partitions stop once leaves >= max_cohorts, but the LAST partition can
+    overshoot: leaves after p splits = 1 + (k-1)p, so the true ceiling is
+    1 + (k-1)·ceil((max_cohorts-1)/(k-1)).
+    """
+    k = max(2, auxo.cluster_k)
+    if not auxo.enabled:
+        return 1, 1
+    n_partitions = -(-(auxo.max_cohorts - 1) // (k - 1))  # ceil
+    return 1 + k * n_partitions, 1 + (k - 1) * n_partitions
+
+
+def table_capacity(fl, auxo) -> int:
+    """Affinity-table column count: bank capacity AFTER shard padding
+    (CohortBank pads so every mesh device owns an equal slot block)."""
+    cap, _ = bank_capacity(auxo)
+    s = max(1, int(getattr(fl, "cohort_shards", 0) or 1))
+    return -(-cap // s) * s
 
 
 # ---------------------------------------------------------------------------
@@ -280,6 +303,28 @@ class AffinityTable:
         masked = np.where(known, self.reward[c, slots], -np.inf)
         return int(slots[int(np.argmax(masked))])
 
+    # store-compatible access API (ARCHITECTURE.md §⑥): the pipeline talks
+    # to the table ONLY through these + the ops above, so the chunked
+    # PopulationStore view (repro.scale.ChunkedAffinityTable) is a drop-in
+    def gather_rows(self, cids) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Full-width (len(cids), capacity) row copies of the three tables."""
+        return self.reward[cids], self.known[cids], self.cluster_idx[cids]
+
+    def scatter_rows(self, cids, reward, known, cluster_idx):
+        self.reward[cids] = reward
+        self.known[cids] = known
+        self.cluster_idx[cids] = cluster_idx
+
+    def match_view(self, cids, slots) -> Tuple[np.ndarray, np.ndarray]:
+        """(reward, known) blocks over (cids × slots) — read-only copies."""
+        return self.reward[cids][:, slots], self.known[cids][:, slots]
+
+    def known_at(self, cids, slot) -> np.ndarray:
+        return self.known[cids, slot]
+
+    def cluster_at(self, c, slot) -> int:
+        return int(self.cluster_idx[c, slot])
+
 
 def check_cross_cohort_unique(client_rows: np.ndarray, kept: np.ndarray):
     """Assert no client id occupies two kept rows in one round.
@@ -385,17 +430,7 @@ class RoundPipeline:
         self.eng = engine
         self.mode = mode
         fl, auxo = engine.fl, engine.auxo
-        k = max(2, auxo.cluster_k)
-        if auxo.enabled:
-            # partitions stop once leaves >= max_cohorts, but the LAST
-            # partition can overshoot: leaves after p splits = 1 + (k-1)p,
-            # so the true ceiling is 1 + (k-1)·ceil((max_cohorts-1)/(k-1))
-            n_partitions = -(-(auxo.max_cohorts - 1) // (k - 1))  # ceil
-            capacity = 1 + k * n_partitions
-            self.max_leaves = 1 + (k - 1) * n_partitions
-        else:
-            capacity = 1
-            self.max_leaves = 1
+        capacity, self.max_leaves = bank_capacity(auxo)
         self.n_shards = max(1, int(fl.cohort_shards or 1))
         if self.n_shards > 1:
             assert mode == "batched", "cohort sharding requires the batched pipeline"
@@ -408,7 +443,20 @@ class RoundPipeline:
             capacity,
             mesh=self.mesh,
         )
-        self.table = AffinityTable(engine.pop.n_clients, self.bank.capacity)
+        # §⑥ population plane: with FLConfig.population_store the table is
+        # a view over the engine's chunked PopulationStore — same method
+        # API, same bit-level math, O(touched clients) memory
+        store = getattr(engine, "store", None)
+        if store is not None:
+            self.table = ChunkedAffinityTable(store)
+            assert self.table.capacity == self.bank.capacity, (
+                self.table.capacity, self.bank.capacity
+            )
+        else:
+            self.table = AffinityTable(engine.pop.n_clients, self.bank.capacity)
+        # full-population id vector for use_availability=False rounds,
+        # computed ONCE (was a per-round O(N) allocation)
+        self._all_ids = np.arange(engine.pop.n_clients, dtype=np.int64)
         # flat execution width: the full round budget, fixed for the run.
         # L·quota(L) ≤ max(int(P·oc), 2·L) for every leaf count L, so this
         # width fits every partition state without a reshape.
@@ -461,9 +509,20 @@ class RoundPipeline:
     def plan_round(self, r: int) -> Optional[MatchPlan]:
         eng, fl, auxo = self.eng, self.eng.fl, self.eng.auxo
         if fl.use_availability:
-            avail = np.asarray(eng.trace.available(r, eng.rng))
+            if getattr(eng.trace, "mode", "compat") == "chunked":
+                # §⑥ streaming availability: per-chunk Poisson counts +
+                # in-chunk id sampling, capped at a candidate pool around
+                # the round budget — O(budget + N/chunk), the full active
+                # set is never materialized
+                pool = max(4 * self.exec_width, 2 * int(fl.participants_per_round))
+                avail, _n_avail = eng.trace.sample(r, pool, eng.rng)
+            else:
+                avail = np.asarray(eng.trace.available(r, eng.rng))
         else:
-            avail = np.arange(eng.pop.n_clients)
+            avail = self._all_ids  # computed once in __init__
+        store = getattr(eng, "store", None)
+        if store is not None and store.n_departed:
+            avail = avail[store.alive(avail)]  # churned-out clients skip rounds
         bl = eng.coordinator.blacklist
         if bl:
             avail = avail[~np.isin(avail, np.fromiter(bl, int, len(bl)))]
@@ -481,7 +540,7 @@ class RoundPipeline:
             # single-leaf rounds: a client "claims" the (only) cohort iff it
             # is its preferred one, i.e. it holds any reward record there —
             # keeps the §5.2 fake-affinity detection live pre-partition
-            claimed = self.table.known[avail, slots[0]]
+            claimed = self.table.known_at(avail, int(slots[0]))
 
         # per-cohort resource budget: equal split of the round budget (§4.4)
         quota = max(
@@ -521,8 +580,8 @@ class RoundPipeline:
             # over-commitment straggler drop: latency is a pure function of
             # device speeds, so the kept set is known before execution
             kept_ids, duration = eng.speeds.round_duration(
-                part.tolist(),
-                [fl.local_steps * fl.batch_size] * take,
+                part,
+                fl.local_steps * fl.batch_size,
                 overcommit=fl.overcommit,
             )
             base = shard * W + int(cursors[shard])
@@ -530,7 +589,7 @@ class RoundPipeline:
             slot_rows[rows] = slots[li]
             client_rows[rows] = part
             real[rows] = True
-            kept[rows] = np.isin(part, np.asarray(kept_ids))
+            kept[rows] = np.isin(part, kept_ids)
             claim_rows[rows] = ccl[sel]
             update_slots[slots[li]] = True
             durations[leaf] = duration
@@ -590,8 +649,8 @@ class RoundPipeline:
         u = eng.rng.random(nA)
         rand_pick = eng.rng.integers(len(leaves), size=nA)
 
-        known = self.table.known[avail][:, slots]  # (nA, L)
-        rew = np.where(known, self.table.reward[avail][:, slots], -np.inf)
+        rew_blk, known = self.table.match_view(avail, slots)  # (nA, L) each
+        rew = np.where(known, rew_blk, -np.inf)
         known_any = known.any(1)
         rand_draw = (~known_any) | (u < eps)
 
@@ -657,7 +716,7 @@ class RoundPipeline:
                     leaf = eng.coordinator.match_request(
                         c,
                         "0",
-                        int(self.table.cluster_idx[c, 0]),
+                        self.table.cluster_at(c, 0),
                         fingerprint=eng.fingerprint[c],
                     )
                     if leaf in leaves:
@@ -1091,16 +1150,23 @@ class RoundPipeline:
         eng.neg_streak[ids[~neg]] = 0
         leaf_slots = np.array([self.bank.slot_of[l] for l in cur], np.int64)
         own = leaf_slots[src]
-        tbl = self.table
+        # one gather → block update → one scatter: the same cells and dtype
+        # math as direct dense writes (ids are unique — see the dedup
+        # assert — so the gathered copies cannot alias), and the only form
+        # the chunked store view can serve without a dense (N, capacity)
+        # table behind it
+        row = np.arange(ids.size)
+        rw, kn, cl = self.table.gather_rows(ids)
         # EMA reward-record update on the trained cohort's slot
-        tbl.reward[ids, own] = gamma * delta + (1.0 - gamma) * tbl.reward[ids, own]
+        rw[row, own] = gamma * delta + (1.0 - gamma) * rw[row, own]
         has = assign >= 0
-        tbl.cluster_idx[ids[has], own[has]] = assign[has]
+        cl[row[has], own[has]] = assign[has]
         # ExploreReward propagation: ΔR/(d+1) to every OTHER leaf
         w = delta[:, None] / (dists[src] + 1.0)
-        w[np.arange(ids.size), src] = 0.0
-        tbl.reward[ids[:, None], leaf_slots[None, :]] += w.astype(np.float32)
-        tbl.known[ids[:, None], leaf_slots[None, :]] = True
+        w[row, src] = 0.0
+        rw[:, leaf_slots] += w.astype(np.float32)
+        kn[:, leaf_slots] = True
+        self.table.scatter_rows(ids, rw, kn, cl)
 
     def _apply_partition(self, event, cur: List[str]):
         child_slots = self.bank.spawn_children(event.parent, event.children)

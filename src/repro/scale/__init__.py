@@ -1,0 +1,27 @@
+"""Population plane (ARCHITECTURE.md §⑥): client count as a streaming
+quantity — chunked client-state store, O(active)-per-round availability
+sampling, and churn. Pure numpy; the fl/ engine mounts these behind
+``FLConfig.population_store`` with bit-equal small-N semantics."""
+from repro.scale.availability import StreamingAvailability
+from repro.scale.churn import ChurnStream
+from repro.scale.store import (
+    ChunkedAffinityTable,
+    ClientField,
+    DictProbeCache,
+    FieldSpec,
+    PopulationStore,
+    StoreProbeCache,
+    make_client_store,
+)
+
+__all__ = [
+    "ChunkedAffinityTable",
+    "ChurnStream",
+    "ClientField",
+    "DictProbeCache",
+    "FieldSpec",
+    "PopulationStore",
+    "StoreProbeCache",
+    "StreamingAvailability",
+    "make_client_store",
+]

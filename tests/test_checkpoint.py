@@ -1,11 +1,17 @@
-"""npz pytree checkpoint roundtrip."""
+"""npz pytree checkpoint roundtrip (+ chunked PopulationStore state)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import load_pytree, save_pytree
+from repro.checkpoint import (
+    load_population_store,
+    load_pytree,
+    save_population_store,
+    save_pytree,
+)
 from repro.configs import get_config, reduce_config
 from repro.models import build_model
+from repro.scale import make_client_store
 
 
 def test_roundtrip(tmp_path):
@@ -25,3 +31,77 @@ def test_shape_mismatch_raises(tmp_path):
     save_pytree(tmp_path / "t.npz", t)
     with pytest.raises(ValueError):
         load_pytree(tmp_path / "t.npz", {"a": jnp.ones((3, 2))})
+
+
+def test_population_store_roundtrip(tmp_path):
+    """Chunk arrays + id index survive save/load; untouched ids still read
+    as defaults; departures are remembered."""
+    rng = np.random.default_rng(0)
+    store = make_client_store(100_000, d_sketch=8, capacity=6, chunk_rows=64)
+    ids = rng.choice(100_000, size=500, replace=False).astype(np.int64)
+    store.scatter("fingerprint", ids, rng.normal(size=(500, 8)).astype(np.float32))
+    store.scatter("reward", ids[:200], rng.normal(size=(200, 6)).astype(np.float32))
+    store.scatter("fp_seen", ids[:300], True)
+    store.depart(ids[:10])
+    save_population_store(tmp_path / "store.npz", store)
+    loaded = load_population_store(tmp_path / "store.npz")
+    assert loaded.n_rows == store.n_rows
+    assert loaded.n_total == store.n_total
+    assert loaded.n_departed == store.n_departed == 10
+    for name in store.field_names:
+        np.testing.assert_array_equal(
+            store.gather(name, ids), loaded.gather(name, ids)
+        )
+        np.testing.assert_array_equal(
+            store.to_dense(name, 100_000), loaded.to_dense(name, 100_000)
+        )
+    # index rebuilt: same rows, and untouched ids stay default/unallocated
+    np.testing.assert_array_equal(store.rows_of(ids), loaded.rows_of(ids))
+    untouched = np.setdiff1d(np.arange(2000, dtype=np.int64), ids)[:50]
+    assert (loaded.rows_of(untouched) == -1).all()
+    np.testing.assert_array_equal(loaded.alive(ids[:10]), np.zeros(10, bool))
+
+
+def test_population_store_roundtrip_alongside_bank(tmp_path):
+    """Engine-shaped checkpoint: bank pytree + store in one directory."""
+    import dataclasses
+
+    from repro.data import make_population
+    from repro.fl import AuxoConfig, AuxoEngine, FLConfig
+    from repro.fl.task import MLPTask
+
+    pop = make_population(n_clients=80, n_groups=2, seed=0)
+    task = MLPTask(dim=pop.dim, n_classes=pop.n_classes)
+    fl = FLConfig(
+        rounds=4, participants_per_round=20, eval_every=3,
+        use_availability=False, seed=0, population_store=True,
+    )
+    auxo = AuxoConfig(max_cohorts=2, clustering_start_frac=0.0)
+    eng = AuxoEngine(task, pop, fl, auxo)
+    for r in range(4):
+        eng.step(r)
+    eng.pipeline.flush()
+    save_pytree(tmp_path / "bank.npz", eng.pipeline.bank.params)
+    save_population_store(tmp_path / "pop.npz", eng.store)
+    params = load_pytree(
+        tmp_path / "bank.npz",
+        jax.tree.map(jnp.zeros_like, eng.pipeline.bank.params),
+    )
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(eng.pipeline.bank.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    loaded = load_population_store(tmp_path / "pop.npz")
+    for name in eng.store.field_names:
+        np.testing.assert_array_equal(
+            eng.store.to_dense(name, pop.n_clients),
+            loaded.to_dense(name, pop.n_clients),
+        )
+    # a restored engine-table view serves reads immediately
+    from repro.scale import ChunkedAffinityTable
+
+    table = ChunkedAffinityTable(loaded)
+    rw, kn, cl = table.to_dense(pop.n_clients)
+    rw0, kn0, cl0 = eng.pipeline.table.to_dense(pop.n_clients)
+    np.testing.assert_array_equal(rw, rw0)
+    np.testing.assert_array_equal(kn, kn0)
+    np.testing.assert_array_equal(cl, cl0)
+    assert dataclasses.asdict(loaded.spec("reward"))["name"] == "reward"

@@ -74,6 +74,31 @@ def test_availability_trace_low_rate():
     assert 0.02 < rate < 0.09  # ~5% availability like the FedScale traces
 
 
+def test_round_duration_scalar_samples_and_array_agree():
+    """The vectorized path: one scalar sample count ≡ a constant per-
+    participant list, ids come back as an array usable for np.isin."""
+    sp = DeviceSpeeds(n_clients=64, sigma=0.8, seed=1)
+    part = np.array([5, 40, 7, 63, 21, 2])
+    kept_a, dur_a = sp.round_duration(part, 160, overcommit=1.25)
+    kept_b, dur_b = sp.round_duration(part.tolist(), [160] * 6, overcommit=1.25)
+    np.testing.assert_array_equal(kept_a, kept_b)
+    assert dur_a == dur_b
+    assert isinstance(kept_a, np.ndarray)
+    assert np.isin(part, kept_a).sum() == kept_a.size
+
+
+def test_availability_per_round_substream():
+    """Omitting the generator gives a seeded per-round substream: draws
+    are reproducible and independent of call order."""
+    tr = AvailabilityTrace(n_clients=500, seed=9)
+    a = tr.available(4)
+    _ = tr.available(11)
+    b = tr.available(4)
+    np.testing.assert_array_equal(a, b)
+    # distinct rounds still differ
+    assert not np.array_equal(tr.available(4), tr.available(5))
+
+
 def test_overcommit_drops_slowest():
     sp = DeviceSpeeds(n_clients=100, sigma=1.0, seed=0)
     participants = list(range(100))

@@ -1,0 +1,378 @@
+"""§⑥ population plane: chunked store ≡ dense tables (bit-for-bit),
+streaming availability, churn with probe-fingerprint cold-start routing."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data import AvailabilityTrace, make_population
+from repro.fl import AuxoConfig, AuxoEngine, FLConfig
+from repro.fl.pipeline import AffinityTable
+from repro.fl.task import MLPTask
+from repro.scale import (
+    ChunkedAffinityTable,
+    ChurnStream,
+    StreamingAvailability,
+    make_client_store,
+)
+
+N_CLIENTS = 64
+CAPACITY = 8
+
+
+def _tables():
+    dense = AffinityTable(N_CLIENTS, CAPACITY)
+    chunked = ChunkedAffinityTable(
+        make_client_store(N_CLIENTS, d_sketch=4, capacity=CAPACITY, chunk_rows=16)
+    )
+    return dense, chunked
+
+
+def _assert_equal(dense: AffinityTable, chunked: ChunkedAffinityTable):
+    rw, kn, cl = chunked.to_dense(N_CLIENTS)
+    np.testing.assert_array_equal(dense.reward, rw)
+    np.testing.assert_array_equal(dense.known, kn)
+    np.testing.assert_array_equal(dense.cluster_idx, cl)
+
+
+def _apply_random_op(rng, dense, chunked):
+    op = rng.integers(6)
+    ids = np.unique(rng.integers(0, N_CLIENTS, size=rng.integers(1, 12)))
+    slot = int(rng.integers(CAPACITY))
+    if op == 0:
+        delta = rng.normal(size=ids.size).astype(np.float32)
+        dense.feedback(ids, slot, delta, 0.2)
+        chunked.feedback(ids, slot, delta, 0.2)
+    elif op == 1:
+        assign = rng.integers(-1, 3, size=ids.size).astype(np.int32)
+        dense.set_cluster(ids, slot, assign)
+        chunked.set_cluster(ids, slot, assign)
+    elif op == 2:
+        delta = rng.normal(size=ids.size).astype(np.float32)
+        slots = rng.permutation(CAPACITY)[: rng.integers(1, 4)]
+        slot_dist = {int(s): int(rng.integers(1, 4)) for s in slots}
+        dense.propagate(ids, delta, slot_dist)
+        chunked.propagate(ids, delta, slot_dist)
+    elif op == 3:
+        dense.wipe(ids)
+        chunked.wipe(ids)
+    elif op == 4:
+        children = [int(c) for c in rng.permutation(CAPACITY)[:2]]
+        dense.seed_children(slot, children)
+        chunked.seed_children(slot, children)
+    else:
+        rw, kn, cl = dense.gather_rows(ids)
+        rw2, kn2, cl2 = chunked.gather_rows(ids)
+        np.testing.assert_array_equal(rw, rw2)
+        np.testing.assert_array_equal(kn, kn2)
+        np.testing.assert_array_equal(cl, cl2)
+        rw = rw + rng.normal(size=rw.shape).astype(np.float32)
+        kn = kn | (rng.random(kn.shape) < 0.3)
+        dense.scatter_rows(ids, rw, kn, cl)
+        chunked.scatter_rows(ids, rw, kn, cl)
+
+
+def test_gather_scatter_roundtrip_randomized():
+    """Random op sequences leave dense and chunked tables bit-identical;
+    reads of never-touched ids come back as defaults without allocating."""
+    rng = np.random.default_rng(0)
+    dense, chunked = _tables()
+    rw, kn, cl = chunked.gather_rows(np.arange(N_CLIENTS))
+    assert chunked.store.n_rows == 0  # pure reads never materialize
+    np.testing.assert_array_equal(rw, np.zeros((N_CLIENTS, CAPACITY), np.float32))
+    np.testing.assert_array_equal(cl, np.full((N_CLIENTS, CAPACITY), -1, np.int32))
+    for _ in range(200):
+        _apply_random_op(rng, dense, chunked)
+    _assert_equal(dense, chunked)
+    assert 0 < chunked.store.n_rows <= N_CLIENTS
+    # view helpers agree too
+    ids = np.arange(0, N_CLIENTS, 3)
+    slots = np.array([0, 3, 5])
+    rw_d, kn_d = dense.match_view(ids, slots)
+    rw_c, kn_c = chunked.match_view(ids, slots)
+    np.testing.assert_array_equal(rw_d, rw_c)
+    np.testing.assert_array_equal(kn_d, kn_c)
+    np.testing.assert_array_equal(
+        dense.known_at(ids, 2), chunked.known_at(ids, 2)
+    )
+    for c in ids[:5]:
+        assert dense.preferred_slot(int(c), slots) == chunked.preferred_slot(
+            int(c), slots
+        )
+        assert dense.cluster_at(int(c), 1) == chunked.cluster_at(int(c), 1)
+
+
+def test_store_ops_property():
+    """Property form of the round-trip: arbitrary interleavings over
+    arbitrary id sets keep the two backings bit-identical."""
+    pytest.importorskip("hypothesis")  # test extra; not in the base image
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 40))
+    def run(seed, n_ops):
+        rng = np.random.default_rng(seed)
+        dense, chunked = _tables()
+        for _ in range(n_ops):
+            _apply_random_op(rng, dense, chunked)
+        _assert_equal(dense, chunked)
+
+    run()
+
+
+def test_client_field_numpy_semantics():
+    """The engine-facing view: fancy-index gather/scatter, augmented
+    assignment, scalar ids — all matching plain numpy array behavior."""
+    from repro.scale import ClientField
+
+    store = make_client_store(1000, d_sketch=4, capacity=3)
+    fp = ClientField(store, "fingerprint")
+    ns = ClientField(store, "neg_streak")
+    ids = np.array([5, 900, 17])
+    fp[ids] = np.arange(12, dtype=np.float32).reshape(3, 4)
+    fp[ids[:2]] *= 0.5  # gather → op → scatter
+    np.testing.assert_array_equal(fp[900], np.array([2, 2.5, 3, 3.5], np.float32))
+    np.testing.assert_array_equal(fp[ids[2]], np.array([8, 9, 10, 11], np.float32))
+    ns[ids] = 0
+    ns[ids[1:]] += 1
+    assert ns[900] == 1 and ns[5] == 0 and ns[17] == 1
+    fp[np.zeros(0, np.int64)] *= 0.9  # empty-id edge is a no-op
+    assert (ns[np.array([0, 1, 2, 3, 4, 6])] == 0).all()  # defaults
+    fp[3] = 7.0  # scalar id broadcast
+    np.testing.assert_array_equal(fp[3], np.full(4, 7.0, np.float32))
+    assert store.n_rows == 4  # only the touched ids (5, 900, 17, 3) cost rows
+
+
+# ---------------------------------------------------------------------------
+# full-engine dense equivalence (partitions included)
+# ---------------------------------------------------------------------------
+def _scenario(seed=5, rounds=30, **fl_kw):
+    pop = make_population(
+        n_clients=300, n_groups=4, group_sep=0.0, dirichlet=3.0,
+        label_conflict=1.0, seed=seed,
+    )
+    task = MLPTask(dim=pop.dim, n_classes=pop.n_classes)
+    kw = dict(use_availability=False)
+    kw.update(fl_kw)
+    fl = FLConfig(
+        rounds=rounds, participants_per_round=60, eval_every=rounds - 1,
+        seed=seed, **kw,
+    )
+    auxo = AuxoConfig(
+        d_sketch=64, cluster_k=2, max_cohorts=3, clustering_start_frac=0.03,
+        partition_start_frac=0.08, partition_end_frac=0.9, min_members=6,
+        margin_threshold=0.35,
+    )
+    return task, pop, fl, auxo
+
+
+def _assert_engines_bit_equal(eng_a: AuxoEngine, eng_b: AuxoEngine, n: int):
+    """eng_a dense, eng_b population_store: every observable is identical."""
+    assert [(p.parent, p.round_idx) for p in eng_a.coordinator.partitions] == [
+        (p.parent, p.round_idx) for p in eng_b.coordinator.partitions
+    ]
+    leaves = eng_a.coordinator.tree.leaves()
+    assert leaves == eng_b.coordinator.tree.leaves()
+    for cid in leaves:
+        for a, b in zip(
+            jax.tree.leaves(eng_a.pipeline.bank.params_of(cid)),
+            jax.tree.leaves(eng_b.pipeline.bank.params_of(cid)),
+        ):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    rw, kn, cl = eng_b.pipeline.table.to_dense(n)
+    np.testing.assert_array_equal(eng_a.pipeline.table.reward, rw)
+    np.testing.assert_array_equal(eng_a.pipeline.table.known, kn)
+    np.testing.assert_array_equal(eng_a.pipeline.table.cluster_idx, cl)
+    np.testing.assert_array_equal(
+        eng_a.fingerprint, eng_b.store.to_dense("fingerprint", n)
+    )
+    np.testing.assert_array_equal(
+        eng_a.fp_seen, eng_b.store.to_dense("fp_seen", n)
+    )
+    np.testing.assert_array_equal(
+        eng_a.neg_streak, eng_b.store.to_dense("neg_streak", n)
+    )
+
+
+def test_population_store_bit_equal_sync():
+    """A full small-N Auxo run through the chunked PopulationStore is
+    bit-for-bit the dense-table run — partitions included."""
+    task, pop, fl, auxo = _scenario()
+    eng_a = AuxoEngine(task, pop, fl, auxo)
+    eng_b = AuxoEngine(
+        task, pop, dataclasses.replace(fl, population_store=True), auxo
+    )
+    hist_a = eng_a.run()
+    hist_b = eng_b.run()
+    assert len(eng_a.coordinator.partitions) >= 1  # partitions exercised
+    _assert_engines_bit_equal(eng_a, eng_b, pop.n_clients)
+    np.testing.assert_array_equal(
+        hist_a[-1]["per_client"], hist_b[-1]["per_client"]
+    )
+    # the store only materialized the touched clients
+    assert eng_b.store.n_rows <= pop.n_clients
+
+
+def test_population_store_bit_equal_overlap():
+    """Same equivalence under the §⑤ depth-2 overlapped schedule (stale
+    plans + partition flushes go through the store views too)."""
+    task, pop, fl, auxo = _scenario(round_overlap=1)
+    eng_a = AuxoEngine(task, pop, fl, auxo)
+    eng_b = AuxoEngine(
+        task, pop, dataclasses.replace(fl, population_store=True), auxo
+    )
+    for r in range(fl.rounds):
+        eng_a.step(r)
+        eng_b.step(r)
+    eng_a.pipeline.flush()
+    eng_b.pipeline.flush()
+    assert eng_a.pipeline.flushes >= 1  # a partition flushed the pipeline
+    assert eng_a.pipeline.flushes == eng_b.pipeline.flushes
+    _assert_engines_bit_equal(eng_a, eng_b, pop.n_clients)
+
+
+def test_population_store_bit_equal_with_availability():
+    """use_availability=True: the compat StreamingAvailability consumes the
+    engine RNG exactly like the dense AvailabilityTrace."""
+    task, pop, fl, auxo = _scenario(rounds=10, use_availability=True)
+    eng_a = AuxoEngine(task, pop, fl, auxo)
+    eng_b = AuxoEngine(
+        task, pop, dataclasses.replace(fl, population_store=True), auxo
+    )
+    hist_a = eng_a.run()
+    hist_b = eng_b.run()
+    _assert_engines_bit_equal(eng_a, eng_b, pop.n_clients)
+    np.testing.assert_array_equal(
+        hist_a[-1]["per_client"], hist_b[-1]["per_client"]
+    )
+
+
+# ---------------------------------------------------------------------------
+# streaming availability
+# ---------------------------------------------------------------------------
+def test_streaming_compat_is_dense_trace():
+    tr = AvailabilityTrace(n_clients=500, seed=3)
+    sa = StreamingAvailability(n_clients=500, seed=3, mode="compat")
+    for r in (0, 7, 90):
+        a = tr.available(r, np.random.default_rng(11))
+        b = sa.available(r, np.random.default_rng(11))
+        np.testing.assert_array_equal(a, b)
+
+
+def test_per_round_substream_is_call_order_independent():
+    tr = AvailabilityTrace(n_clients=400, seed=1)
+    fwd = [tr.available(r) for r in range(5)]
+    rev = [tr.available(r) for r in reversed(range(5))]
+    for r in range(5):
+        np.testing.assert_array_equal(fwd[r], rev[4 - r])
+
+
+def test_chunked_sampler_rate_and_budget():
+    sa = StreamingAvailability(
+        n_clients=200_000, seed=0, mode="chunked", base_rate=0.05
+    )
+    # reproducible per-round substream
+    ids1, tot1 = sa.sample(3, 500)
+    ids2, tot2 = sa.sample(3, 500)
+    np.testing.assert_array_equal(ids1, ids2)
+    assert tot1 == tot2
+    # population-level rate matches the dense trace's regime (~5%)
+    tots = [sa.sample(r, 100)[1] for r in range(20)]
+    rate = np.mean(tots) / 200_000
+    assert 0.02 < rate < 0.09
+    # the budget caps the materialized candidate set
+    ids, tot = sa.sample(0, 500)
+    assert ids.size <= 500 < tot
+    assert ids.size and np.all((0 <= ids) & (ids < 200_000))
+    assert np.array_equal(ids, np.unique(ids))  # sorted unique ids
+    # full materialization stays O(active)
+    all_ids = sa.available(0)
+    assert abs(all_ids.size - tot) / tot < 0.15
+
+
+# ---------------------------------------------------------------------------
+# churn
+# ---------------------------------------------------------------------------
+def test_churn_stream_conserves_population():
+    cs = ChurnStream(n_clients=1000, depart_rate=0.05, return_rate=0.3, seed=2)
+    seen_away = set()
+    for r in range(30):
+        dep, arr = cs.step(r)
+        assert np.intersect1d(dep, arr).size == 0
+        seen_away.difference_update(arr.tolist())
+        assert not seen_away.intersection(dep.tolist())  # no double departure
+        seen_away.update(dep.tolist())
+        assert set(cs.away.tolist()) == seen_away
+    assert 0 < cs.away.size < 1000
+
+
+def test_churn_departure_and_probe_rearrival():
+    """A departed client's soft state is wiped; its re-arrival is a cold
+    start that routes through the probe-fingerprint path at serve time."""
+    task, pop, fl, auxo = _scenario(rounds=14)
+    eng = AuxoEngine(
+        task, pop, dataclasses.replace(fl, population_store=True), auxo
+    )
+    for r in range(fl.rounds):
+        eng.step(r)
+    eng.pipeline.flush()
+    trained = np.flatnonzero(eng.store.to_dense("fp_seen", pop.n_clients))
+    assert trained.size
+    c = int(trained[0])
+    eng.apply_churn(departures=[c])
+    assert not eng.fp_seen[c]  # fingerprint EMA wiped
+    assert not eng.store.alive(np.array([c]))[0]
+    rw, kn, _ = eng.pipeline.table.gather_rows(np.array([c]))
+    assert not kn.any() and not rw.any()  # affinity records wiped
+    plan = eng.pipeline.plan_round(fl.rounds)
+    assert plan is None or c not in plan.client_rows[plan.real]
+    eng.apply_churn(arrivals=[c])
+    assert eng.store.alive(np.array([c]))[0]
+    assert eng.store.n_departed == 0
+    # serve the returnee: must go through a probe dispatch (cold start)
+    calls = []
+    orig = eng._vmapped_probe_train
+    eng._vmapped_probe_train = lambda *a: (calls.append(1), orig(*a))[1]
+    leaf = eng.client_cohort(c)
+    assert leaf in eng.coordinator.tree.nodes
+    assert len(calls) >= 1
+    assert c in eng._probe_cache  # cached in the store's probe rows
+    eng.client_cohort(c)
+    assert len(calls) == 1  # second serve hits the store-backed cache
+
+
+def test_rearrival_is_cold_even_after_late_feedback():
+    """§⑤ overlap can deliver feedback for a round that was in flight when
+    a client departed, re-writing its wiped row; the cold-start contract
+    must therefore hold at ARRIVAL time, not only at departure."""
+    store = make_client_store(100, d_sketch=4, capacity=3)
+    store.scatter("fingerprint", np.array([7]), 1.0)
+    store.scatter("fp_seen", np.array([7]), True)
+    store.depart(np.array([7]))
+    # late in-flight feedback lands on the wiped row
+    store.scatter("fingerprint", np.array([7]), 2.0)
+    store.scatter("fp_seen", np.array([7]), True)
+    store.arrive(np.array([7]))
+    assert store.alive(np.array([7]))[0]
+    assert not store.gather("fp_seen", np.array([7]))[0]
+    assert (store.gather("fingerprint", np.array([7])) == 0).all()
+
+
+def test_engine_runs_with_chunked_availability_and_churn():
+    """The dynamic-population mode end to end: chunked sampling + an
+    attached churn stream; rounds train, histories stay well-formed."""
+    task, pop, fl, auxo = _scenario(rounds=8, use_availability=True)
+    pop_fl = dataclasses.replace(
+        fl, population_store=True, availability_mode="chunked"
+    )
+    eng = AuxoEngine(task, pop, pop_fl, auxo)
+    # make the tiny population behave: one chunk, high return rate
+    eng.trace.base_rate = 0.5
+    eng.churn = ChurnStream(
+        pop.n_clients, depart_rate=0.02, return_rate=0.5, seed=1
+    )
+    hist = eng.run()
+    assert eng.pipeline.exec_dispatches >= 1
+    assert 0.0 <= hist[-1]["acc_mean"] <= 1.0
+    assert eng.store.n_rows <= pop.n_clients + 1
