@@ -12,13 +12,19 @@ from repro.fl.engine import AuxoEngine
 from repro.fl import AuxoConfig
 
 
-def _pairwise_data_similarity(pop, ids):
-    """Cosine similarity of client label+feature moment vectors."""
+def _pairwise_data_similarity(plane, ids):
+    """Cosine similarity of client label+feature moment vectors.
+
+    Moments estimate from each client's deterministic probe draws (§⑦
+    DataPlane API — no reach into per-client arrays), so the same code
+    measures materialized and procedural populations.
+    """
+    xs, ys = plane.probe_batches(ids, batch=64, steps=4)
     feats = []
-    for c in ids:
-        cl = pop.clients[c]
-        hist = np.bincount(cl.y, minlength=pop.n_classes) / len(cl.y)
-        mean = cl.x.mean(0)
+    for i in range(len(ids)):
+        y = ys[i].ravel()
+        hist = np.bincount(y, minlength=plane.n_classes) / y.size
+        mean = xs[i].reshape(-1, plane.dim).mean(0)
         feats.append(np.concatenate([hist * 3.0, mean / (np.linalg.norm(mean) + 1e-9)]))
     F = np.stack(feats)
     F = F - F.mean(0)
@@ -30,8 +36,8 @@ def run(rounds: int = 60):
     task, pop = build("openimage-like")
     fl = default_fl(rounds, use_availability=False)
     eng = AuxoEngine(task, pop, fl, AuxoConfig(enabled=False, d_sketch=128))
-    ids = list(range(150))
-    D = _pairwise_data_similarity(pop, ids)
+    ids = np.arange(150, dtype=np.int64)
+    D = _pairwise_data_similarity(eng.data, ids)
     iu = np.triu_indices(len(ids), k=1)
 
     rows = []
@@ -40,14 +46,12 @@ def run(rounds: int = 60):
         if r % max(1, rounds // 8) != 0:
             continue
         cm = eng.cohorts["0"]
-        xs, ys = [], []
-        for c in ids:
-            x, y = pop.sample_batch(c, fl.batch_size, fl.local_steps, eng.rng)
-            xs.append(x)
-            ys.append(y)
+        xs, ys = eng.data.sample_batches(
+            ids, fl.batch_size, fl.local_steps, eng.rng
+        )
         keys = jax.random.split(jax.random.key(r), len(ids))
         deltas, _ = eng._vmapped_train(
-            cm.params, jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys)), keys
+            cm.params, jnp.asarray(xs), jnp.asarray(ys), keys
         )
         sk = np.asarray(eng._vmapped_sketch(deltas))
         sk = sk - sk.mean(0)

@@ -13,15 +13,19 @@ mid-run partition reseed — at a FIXED participant budget while N sweeps
 - store bytes at N = 1M within 2x of N = 100k (memory tripwire) — a dense
   control plane is ~1 KB/client, i.e. ~1 GB at 1M, reported for contrast.
 
-The model plane is deliberately absent: rounds here are availability +
-matching + soft-state feedback only — exactly the paths that were O(N) in
-the dense engine (benchmarks/round_latency.py and round_overlap.py cover
-the device side). The full engine integration is exercised bit-for-bit at
-small N by tests/test_population_scale.py.
+FULL-ENGINE mode (§⑦, the DataPlane protocol): with the data plane also
+streaming (``ProceduralDataPlane`` — client shards regenerate from a
+hash-seeded stream, no per-client arrays), the COMPLETE engine — matching,
+fused device training, clustering feedback — runs at N = 10⁶. The sweep
+runs a few real engine rounds at N = 100k and 1M at a fixed participant
+budget and asserts the data-plane tripwire: resident data-plane bytes at
+1M within 1.5x of 100k (a materialized plane is ~20 KB/client —
+~20 GB at 1M, reported for contrast).
 
 Writes BENCH_population_scale.json at the repo root unless --smoke, which
-runs the N = 100k vs 1M pair for a few rounds and fails CI if resident
-client-state bytes scale with N instead of the active set.
+runs the N = 100k vs 1M pair for a few rounds (store-level AND
+full-engine) and fails CI if resident bytes scale with N instead of the
+active set.
 
 Usage:  python benchmarks/population_scale.py [--budget 1000] [--smoke]
 """
@@ -136,6 +140,60 @@ def run_rounds(n_clients: int, budget: int, rounds: int, seed: int,
     }
 
 
+def run_full_engine(n_clients: int, budget: int, rounds: int, seed: int):
+    """§⑦: drive the FULL AuxoEngine (matching + fused training + feedback)
+    at population size N with a streaming data plane. Returns per-round
+    wall-clock and the resident-bytes breakdown the tripwire checks."""
+    # engine imports stay local: the store-level sweep must not pay jax init
+    from repro.data import ProceduralDataPlane
+    from repro.fl import AuxoConfig, AuxoEngine, FLConfig
+    from repro.fl.task import MLPTask
+
+    plane = ProceduralDataPlane(
+        n_clients=n_clients, n_groups=4, group_sep=0.0, dirichlet=3.0,
+        label_conflict=1.0, seed=seed,
+    )
+    task = MLPTask(dim=plane.dim, n_classes=plane.n_classes)
+    fl = FLConfig(
+        rounds=rounds,
+        participants_per_round=budget,
+        eval_every=10**9,  # evaluation is O(N) by definition; not timed here
+        seed=seed,
+        use_availability=True,
+        population_store=True,
+        availability_mode="chunked",
+    )
+    auxo = AuxoConfig(
+        d_sketch=D_SKETCH, cluster_k=2, max_cohorts=4,
+        clustering_start_frac=0.0, partition_start_frac=0.3,
+        partition_end_frac=0.9, min_members=10,
+    )
+    eng = AuxoEngine(task, plane, fl, auxo)
+    times = []
+    for r in range(rounds):
+        t0 = time.perf_counter()
+        eng.step(r)
+        times.append(time.perf_counter() - t0)
+    eng.pipeline.flush()
+    assert eng.pipeline.exec_dispatches >= rounds  # every round trained
+    steady = times[1:] or times  # round 0 carries the jit compile
+    return {
+        "n_clients": n_clients,
+        "rounds": rounds,
+        "budget": budget,
+        "ms_per_round": float(np.median(steady) * 1e3),
+        "compile_round_ms": float(times[0] * 1e3),
+        "participant_rows": int(eng.pipeline.exec_width),
+        "plane_mbytes": plane.data_nbytes / 1e6,
+        "store_mbytes": eng.store.nbytes / 1e6,
+        "touched_rows": int(eng.store.n_rows),
+        "dense_plane_mbytes_equiv": float(
+            # a materialized plane: ~samples_mean (d+1) float32 + y per client
+            n_clients * plane.samples_mean * (plane.dim + 1) * 4 / 1e6
+        ),
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--sizes", type=int, nargs="+",
@@ -143,6 +201,11 @@ def main():
     ap.add_argument("--budget", type=int, default=1000)
     ap.add_argument("--rounds", type=int, default=40)
     ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--engine-budget", type=int, default=200,
+                    help="participants/round for the full-engine pair")
+    ap.add_argument("--engine-rounds", type=int, default=4)
+    ap.add_argument("--skip-engine", action="store_true",
+                    help="store-level sweep only (no jax, no training)")
     ap.add_argument(
         "--smoke",
         action="store_true",
@@ -151,6 +214,7 @@ def main():
     args = ap.parse_args()
     if args.smoke:
         args.sizes, args.rounds = [100_000, 1_000_000], 8
+        args.engine_rounds = 3
 
     sweep = []
     for n in args.sizes:
@@ -184,9 +248,45 @@ def main():
             f"host ms/round scales with N (x{t_ratio:.2f} > {t_bound}x)"
         )
 
+    # ---------------------------------------------------- full-engine pair
+    # (runs for the canonical 100k/1M sweep only: a custom --sizes probe of
+    # the numpy store plane should not pay jax init + two engine compiles)
+    engine_sweep = []
+    run_engine = not args.skip_engine and (
+        args.smoke or {100_000, 1_000_000} <= set(args.sizes)
+    )
+    if run_engine:
+        for n in (100_000, 1_000_000):
+            row = run_full_engine(
+                n, args.engine_budget, args.engine_rounds, args.seed
+            )
+            engine_sweep.append(row)
+            print(
+                f"engine N={n:>9,}  {row['ms_per_round']:8.1f} ms/round  "
+                f"data plane {row['plane_mbytes']:6.2f} MB "
+                f"(materialized would be "
+                f"{row['dense_plane_mbytes_equiv']:9.1f} MB), "
+                f"store {row['store_mbytes']:6.2f} MB"
+            )
+        e_big, e_mid = engine_sweep[1], engine_sweep[0]
+        p_ratio = e_big["plane_mbytes"] / e_mid["plane_mbytes"]
+        print(f"full engine 1M vs 100k: data-plane bytes x{p_ratio:.2f}")
+        # §⑦ tripwire: resident DATA-plane bytes must not scale with N —
+        # the procedural plane holds structure + an O(budget) shard LRU
+        assert p_ratio <= 1.5, (
+            f"data-plane resident bytes scale with N (x{p_ratio:.2f})"
+        )
+        assert (
+            e_big["plane_mbytes"] < 0.01 * e_big["dense_plane_mbytes_equiv"]
+        ), (e_big["plane_mbytes"], e_big["dense_plane_mbytes_equiv"])
+
     if args.smoke:
-        print("smoke OK: host time + client-state bytes track the active "
-              "set, not N")
+        checked = "host time + client-state bytes"
+        if engine_sweep:
+            checked += " + full-engine data-plane bytes"
+        else:
+            print("NOTE: --skip-engine — the data-plane tripwire did NOT run")
+        print(f"smoke OK: {checked} track the active set, not N")
         return
 
     out = {
@@ -200,8 +300,19 @@ def main():
         out["time_ratio_1m_vs_100k"] = t_ratio
         out["bytes_ratio_1m_vs_100k"] = b_ratio
     path = Path(__file__).resolve().parent.parent / "BENCH_population_scale.json"
+    if engine_sweep:
+        out["full_engine"] = engine_sweep
+        out["engine_plane_bytes_ratio_1m_vs_100k"] = p_ratio
+    elif path.exists():  # --skip-engine must not clobber recorded engine rows
+        prev = json.loads(path.read_text())
+        for k in ("full_engine", "engine_plane_bytes_ratio_1m_vs_100k"):
+            if k in prev:
+                out[k] = prev[k]
     path.write_text(json.dumps(out, indent=2) + "\n")
-    print(json.dumps({k: v for k, v in out.items() if k != "sweep"}, indent=2))
+    print(json.dumps(
+        {k: v for k, v in out.items() if k not in ("sweep", "full_engine")},
+        indent=2,
+    ))
 
 
 if __name__ == "__main__":

@@ -6,8 +6,10 @@ coordinator's own soft state has a separate pickle checkpoint
 (repro.core.coordinator.CohortCoordinator.checkpoint).
 """
 from repro.checkpoint.npz import (
+    load_data_plane,
     load_population_store,
     load_pytree,
+    save_data_plane,
     save_population_store,
     save_pytree,
 )
@@ -15,6 +17,8 @@ from repro.checkpoint.npz import (
 __all__ = [
     "save_pytree",
     "load_pytree",
+    "save_data_plane",
+    "load_data_plane",
     "save_population_store",
     "load_population_store",
 ]

@@ -1,4 +1,5 @@
-"""Flat-keyed npz pytree checkpointing (+ chunked PopulationStore state).
+"""Flat-keyed npz pytree checkpointing (+ chunked PopulationStore state
+and §⑦ DataPlane specs).
 
 ``save_pytree``/``load_pytree`` cover model/optimizer pytrees (the
 CohortBank's stacked leaves). ``save_population_store`` /
@@ -6,6 +7,11 @@ CohortBank's stacked leaves). ``save_population_store`` /
 materialized chunks stack into one array, the per-chunk owner maps ride
 along, and the paged id→row index is REBUILT from the owners on load — the
 checkpoint stays O(touched clients), like the store itself.
+``save_data_plane``/``load_data_plane`` persist the DATA plane as its
+generation RECIPE (a handful of scalars), never as client arrays — a
+million-client procedural plane checkpoints in O(1) bytes, and a
+materialized population rebuilds bit-identically from its
+``make_population`` spec.
 """
 from __future__ import annotations
 
@@ -16,6 +22,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.data.datasets import make_population
+from repro.data.plane import (
+    DataPlane,
+    MaterializedDataPlane,
+    ProceduralDataPlane,
+)
 from repro.scale.store import FieldSpec, PopulationStore
 
 
@@ -41,6 +53,39 @@ def load_pytree(path: str | Path, like: Any) -> Any:
     return jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(like), leaves
     )
+
+
+def save_data_plane(path: str | Path, plane: DataPlane):
+    """Checkpoint a DataPlane as its spec — a recipe, not arrays.
+
+    Raises for planes that cannot describe themselves (e.g. a
+    MaterializedDataPlane wrapping hand-built arrays with no
+    ``make_population`` spec): such data must be persisted by its owner.
+    """
+    spec = plane.plane_spec()
+    if spec is None:
+        raise ValueError(
+            f"{type(plane).__name__} holds opaque data (no generation "
+            "spec); persist the underlying arrays yourself"
+        )
+    np.savez(path, **{f"spec:{k}": np.asarray(v) for k, v in spec.items()})
+
+
+def load_data_plane(path: str | Path) -> DataPlane:
+    """Rebuild a DataPlane from its spec checkpoint (bit-identical data:
+    both plane kinds regenerate deterministically from the seed)."""
+    data = np.load(path, allow_pickle=False)
+    spec = {
+        k[len("spec:"):]: data[k][()] for k in data.files
+        if k.startswith("spec:")
+    }
+    kind = str(spec.pop("kind"))
+    spec = {k: v.item() for k, v in spec.items()}
+    if kind == "procedural":
+        return ProceduralDataPlane(**spec)
+    if kind == "materialized":
+        return MaterializedDataPlane(make_population(**spec))
+    raise ValueError(f"unknown data-plane kind {kind!r}")
 
 
 def save_population_store(path: str | Path, store: PopulationStore):

@@ -1,10 +1,28 @@
-"""Federated data pipeline: non-IID partitions, availability, device traces."""
+"""Federated data pipeline: non-IID partitions, availability, device traces,
+and the DataPlane protocol (§⑦) the engine consumes client data through."""
 from repro.data.availability import AvailabilityTrace, DeviceSpeeds
-from repro.data.datasets import FederatedClassification, make_population
+from repro.data.datasets import (
+    FederatedClassification,
+    PopulationStructure,
+    draw_structure,
+    make_population,
+)
+from repro.data.plane import (
+    DataPlane,
+    MaterializedDataPlane,
+    ProceduralDataPlane,
+    as_plane,
+)
 
 __all__ = [
     "AvailabilityTrace",
+    "DataPlane",
     "DeviceSpeeds",
     "FederatedClassification",
+    "MaterializedDataPlane",
+    "PopulationStructure",
+    "ProceduralDataPlane",
+    "as_plane",
+    "draw_structure",
     "make_population",
 ]

@@ -25,6 +25,108 @@ class ClientData:
     group: int  # latent ground-truth cohort (never shown to Auxo)
 
 
+@dataclasses.dataclass(frozen=True)
+class PopulationStructure:
+    """The group-level generative structure shared by every client of a
+    population: class prototypes, per-group feature transforms, label
+    priors, and the label-conflict permutations. Drawn ONCE from a seed
+    (``draw_structure``) — both the materialized generator
+    (``make_population``) and the streaming ``ProceduralDataPlane``
+    consume the same structure, so populations built either way share
+    their group geometry exactly."""
+
+    class_means: np.ndarray  # (n_classes, dim)
+    group_rot: np.ndarray  # (n_groups, dim, dim)
+    group_shift: np.ndarray  # (n_groups, dim)
+    group_prior: np.ndarray  # (n_groups, n_classes)
+    group_perm: np.ndarray  # (n_groups, n_classes) label-conflict permutation
+
+    @property
+    def n_groups(self) -> int:
+        return self.group_prior.shape[0]
+
+    @property
+    def n_classes(self) -> int:
+        return self.class_means.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.class_means.shape[1]
+
+
+def draw_structure(
+    rng: np.random.Generator,
+    n_groups: int,
+    n_classes: int,
+    dim: int,
+    group_sep: float,
+    label_conflict: float,
+) -> PopulationStructure:
+    """Draw the group-level structure. The draw ORDER is frozen: it is the
+    exact header of the original ``make_population`` stream, so populations
+    generated before this refactor are bit-identical."""
+    class_means = rng.normal(size=(n_classes, dim))
+    class_means *= 2.2 / np.linalg.norm(class_means, axis=1, keepdims=True)
+
+    # per-group affine transforms: rotation + shift, scaled by group_sep
+    group_rot = []
+    group_shift = []
+    for g in range(n_groups):
+        q, _ = np.linalg.qr(rng.normal(size=(dim, dim)))
+        t = group_sep / max(n_groups - 1, 1) * g / 2.0
+        rot = (1 - t) * np.eye(dim) + t * q
+        group_rot.append(rot)
+        group_shift.append(rng.normal(size=dim) * group_sep * 0.4)
+    # per-group label priors (distinct dominant classes)
+    group_prior = []
+    for g in range(n_groups):
+        alpha = np.full(n_classes, 0.3)
+        dominant = rng.choice(n_classes, size=max(1, n_classes // n_groups), replace=False)
+        alpha[dominant] = 6.0
+        group_prior.append(rng.dirichlet(alpha))
+
+    # per-group label permutation over a conflict subset of classes
+    n_conf = int(round(label_conflict * n_classes))
+    conf_classes = rng.choice(n_classes, size=n_conf, replace=False) if n_conf else np.array([], int)
+    group_perm = []
+    for g in range(n_groups):
+        perm = np.arange(n_classes)
+        if n_conf > 1:
+            shuffled = np.roll(conf_classes, g)  # distinct permutation per group
+            perm[conf_classes] = shuffled
+        group_perm.append(perm)
+    return PopulationStructure(
+        class_means=class_means,
+        group_rot=np.stack(group_rot),
+        group_shift=np.stack(group_shift),
+        group_prior=np.stack(group_prior),
+        group_perm=np.stack(group_perm),
+    )
+
+
+def sample_group_xy(
+    struct: PopulationStructure,
+    g: int,
+    prior: np.ndarray,
+    n: int,
+    client_shift: np.ndarray,
+    rng: np.random.Generator,
+    label_noise: float = 0.0,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Draw n (x, y) samples of group ``g`` under a client label prior and
+    affine shift — the single xy recipe behind materialized clients, test
+    sets, and procedural shards (draw order frozen, see draw_structure)."""
+    n_classes = struct.n_classes
+    y = rng.choice(n_classes, size=n, p=prior)
+    x = struct.class_means[y] + 0.7 * rng.normal(size=(n, struct.dim))
+    x = x @ struct.group_rot[g].T + struct.group_shift[g] + client_shift
+    y = struct.group_perm[g][y]  # conflicting concepts across groups
+    if label_noise > 0:
+        flip = rng.random(n) < label_noise
+        y = np.where(flip, rng.integers(0, n_classes, size=n), y)
+    return x.astype(np.float32), y.astype(np.int32)
+
+
 @dataclasses.dataclass
 class FederatedClassification:
     clients: List[ClientData]
@@ -33,6 +135,10 @@ class FederatedClassification:
     n_classes: int
     dim: int
     n_groups: int
+    # generation spec (make_population kwargs) when known — lets
+    # checkpoint.save_data_plane persist the POPULATION as a recipe
+    # instead of arrays (ARCHITECTURE.md §⑦)
+    spec: Optional[dict] = None
 
     @property
     def n_clients(self) -> int:
@@ -113,60 +219,25 @@ def make_population(
     cohort models can. This is the regime where heterogeneity genuinely
     caps global-model accuracy (paper §2.2)."""
     rng = np.random.default_rng(seed)
-
-    class_means = rng.normal(size=(n_classes, dim))
-    class_means *= 2.2 / np.linalg.norm(class_means, axis=1, keepdims=True)
-
-    # per-group affine transforms: rotation + shift, scaled by group_sep
-    group_rot = []
-    group_shift = []
-    for g in range(n_groups):
-        q, _ = np.linalg.qr(rng.normal(size=(dim, dim)))
-        t = group_sep / max(n_groups - 1, 1) * g / 2.0
-        rot = (1 - t) * np.eye(dim) + t * q
-        group_rot.append(rot)
-        group_shift.append(rng.normal(size=dim) * group_sep * 0.4)
-    # per-group label priors (distinct dominant classes)
-    group_prior = []
-    for g in range(n_groups):
-        alpha = np.full(n_classes, 0.3)
-        dominant = rng.choice(n_classes, size=max(1, n_classes // n_groups), replace=False)
-        alpha[dominant] = 6.0
-        group_prior.append(rng.dirichlet(alpha))
-
-    # per-group label permutation over a conflict subset of classes
-    n_conf = int(round(label_conflict * n_classes))
-    conf_classes = rng.choice(n_classes, size=n_conf, replace=False) if n_conf else np.array([], int)
-    group_perm = []
-    for g in range(n_groups):
-        perm = np.arange(n_classes)
-        if n_conf > 1:
-            shuffled = np.roll(conf_classes, g)  # distinct permutation per group
-            perm[conf_classes] = shuffled
-        group_perm.append(perm)
-
-    def sample_xy(g: int, prior: np.ndarray, n: int, client_shift: np.ndarray):
-        y = rng.choice(n_classes, size=n, p=prior)
-        x = class_means[y] + 0.7 * rng.normal(size=(n, dim))
-        x = x @ group_rot[g].T + group_shift[g] + client_shift
-        y = group_perm[g][y]  # conflicting concepts across groups
-        if label_noise > 0:
-            flip = rng.random(n) < label_noise
-            y = np.where(flip, rng.integers(0, n_classes, size=n), y)
-        return x.astype(np.float32), y.astype(np.int32)
+    struct = draw_structure(rng, n_groups, n_classes, dim, group_sep, label_conflict)
 
     clients: List[ClientData] = []
     sizes = np.maximum(8, rng.lognormal(np.log(samples_mean), 0.6, n_clients)).astype(int)
     for i in range(n_clients):
         g = i % n_groups
-        prior = rng.dirichlet(dirichlet * n_classes * group_prior[g] + 1e-3)
+        prior = rng.dirichlet(dirichlet * n_classes * struct.group_prior[g] + 1e-3)
         client_shift = affine_shift * rng.normal(size=dim)
-        x, y = sample_xy(g, prior, sizes[i], client_shift)
+        x, y = sample_group_xy(
+            struct, g, prior, sizes[i], client_shift, rng, label_noise
+        )
         clients.append(ClientData(x=x, y=y, group=g))
 
     test_x, test_y = {}, {}
     for g in range(n_groups):
-        x, y = sample_xy(g, group_prior[g], test_per_group, np.zeros(dim))
+        x, y = sample_group_xy(
+            struct, g, struct.group_prior[g], test_per_group, np.zeros(dim),
+            rng, label_noise,
+        )
         test_x[g], test_y[g] = x, y
 
     return FederatedClassification(
@@ -176,4 +247,18 @@ def make_population(
         n_classes=n_classes,
         dim=dim,
         n_groups=n_groups,
+        spec=dict(
+            n_clients=n_clients,
+            n_groups=n_groups,
+            n_classes=n_classes,
+            dim=dim,
+            samples_mean=samples_mean,
+            group_sep=group_sep,
+            dirichlet=dirichlet,
+            affine_shift=affine_shift,
+            label_noise=label_noise,
+            label_conflict=label_conflict,
+            test_per_group=test_per_group,
+            seed=seed,
+        ),
     )

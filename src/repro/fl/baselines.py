@@ -26,7 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.availability import DeviceSpeeds
-from repro.data.datasets import FederatedClassification
+from repro.data.plane import as_plane
 from repro.fl.algorithms import make_server_opt
 from repro.fl.client import local_train
 from repro.fl.engine import AuxoConfig, AuxoEngine, FLConfig
@@ -73,11 +73,16 @@ def _agglomerative(x: np.ndarray, k: int, max_linkage: int = 250) -> np.ndarray:
 
 
 class _Base:
-    """Shared scaffolding: population, task, metrics, simulated clock."""
+    """Shared scaffolding: population, task, metrics, simulated clock.
 
-    def __init__(self, task, pop: FederatedClassification, fl: FLConfig, k: int):
+    Client data flows ONLY through the §⑦ DataPlane protocol (a raw
+    FederatedClassification wraps into a MaterializedDataPlane), so every
+    baseline runs against procedural million-client planes too.
+    """
+
+    def __init__(self, task, pop, fl: FLConfig, k: int):
         self.task = task
-        self.pop = pop
+        self.pop = as_plane(pop)
         self.fl = fl
         self.k = k
         self.rng = np.random.default_rng(fl.seed)
@@ -97,9 +102,12 @@ class _Base:
         self.clock += lat * (1.0 + extra_frac)
 
     def _client_delta(self, params, c: int, key):
-        x, y = self.pop.sample_batch(c, self.fl.batch_size, self.fl.local_steps, self.rng)
+        xb, yb = self.pop.sample_batches(
+            np.array([c]), self.fl.batch_size, self.fl.local_steps, self.rng
+        )
         delta, loss = local_train(
-            self.task.loss, params, jnp.asarray(x), jnp.asarray(y), key, lr=self.fl.lr
+            self.task.loss, params, jnp.asarray(xb[0]), jnp.asarray(yb[0]),
+            key, lr=self.fl.lr,
         )
         self.resource += self.fl.local_steps * self.fl.batch_size
         return delta, float(loss)
@@ -110,14 +118,18 @@ class _Base:
 
     def _eval(self, r: int, assignment: np.ndarray, models: List[Any]) -> Dict[str, Any]:
         per_client = np.zeros(self.pop.n_clients)
+        tx, ty = self.pop.eval_batches()
         accs = {}
         for ci in range(len(models)):
             accs[ci] = {
-                g: self.task.accuracy(models[ci], self.pop.test_x[g], self.pop.test_y[g])
+                g: self.task.accuracy(models[ci], tx[g], ty[g])
                 for g in range(self.pop.n_groups)
             }
+        groups = self.pop.client_groups(
+            np.arange(self.pop.n_clients, dtype=np.int64)
+        )
         for c in range(self.pop.n_clients):
-            per_client[c] = accs[int(assignment[c])][self.pop.clients[c].group]
+            per_client[c] = accs[int(assignment[c])][int(groups[c])]
         srt = np.sort(per_client)
         n10 = max(1, len(srt) // 10)
         rec = {
@@ -150,9 +162,11 @@ class IFCA(_Base):
             for c in part:
                 # client downloads ALL k models and evaluates each locally
                 self.comm += self.k
-                x, y = self.pop.sample_batch(c, fl.batch_size, 1, self.rng)
+                xb, yb = self.pop.sample_batches(
+                    np.array([c]), fl.batch_size, 1, self.rng
+                )
                 losses = [
-                    float(self.task.loss(m, (jnp.asarray(x[0]), jnp.asarray(y[0]))))
+                    float(self.task.loss(m, (jnp.asarray(xb[0, 0]), jnp.asarray(yb[0, 0]))))
                     for m in models
                 ]
                 self.resource += self.k * fl.batch_size  # k local eval passes

@@ -39,7 +39,7 @@ from repro.core.criteria import PartitionCriteria
 from repro.core.selection import CohortSelector
 from repro.core.sketch import GradientSketcher
 from repro.data.availability import AvailabilityTrace, DeviceSpeeds
-from repro.data.datasets import FederatedClassification
+from repro.data.plane import DataPlane, as_plane
 from repro.fl.algorithms import make_server_opt
 from repro.fl.client import local_train
 from repro.fl.pipeline import RoundPipeline, table_capacity
@@ -109,6 +109,13 @@ class FLConfig:
     # "chunked" = per-chunk Poisson thinning, O(budget + N/chunk) per
     # round — the million-client mode (see repro/scale/availability.py).
     availability_mode: str = "compat"
+    # §⑥/⑦ churn-aware matching: re-arrivals are cold starts by default
+    # (their soft state is gone, §5.2) and re-explore at random. With this
+    # flag a re-arrival's FIRST check-in instead probes the root model and
+    # is seeded into the probe fingerprint's nearest-identity leaf — the
+    # same one-shot signal serve-time routing uses. Requires
+    # population_store=True; A/B'd in tests/test_population_scale.py.
+    warm_rearrivals: bool = False
     # resilience knobs (§7.5)
     corrupt_frac: float = 0.0
     dp_clip: float = 0.0
@@ -177,12 +184,18 @@ class AuxoEngine:
     def __init__(
         self,
         task,
-        population: FederatedClassification,
+        population,  # a DataPlane, or a FederatedClassification to wrap
         fl: FLConfig,
         auxo: Optional[AuxoConfig] = None,
     ):
         self.task = task
-        self.pop = population
+        # §⑦ data plane: the engine touches client data ONLY through this
+        # protocol (sizes/groups/batches/eval sets). A raw
+        # FederatedClassification wraps into a MaterializedDataPlane —
+        # bit-for-bit the pre-protocol behavior; a ProceduralDataPlane
+        # makes N a streaming quantity (no per-client arrays resident).
+        self.data: DataPlane = as_plane(population)
+        self.pop = self.data  # back-compat alias (same protocol surface)
         self.fl = fl
         self.auxo = auxo or AuxoConfig(enabled=False)
         self.rng = np.random.default_rng(fl.seed)
@@ -227,20 +240,20 @@ class AuxoEngine:
         # keeps plain numpy arrays — the facades below index identically.
         if fl.population_store:
             self.store = make_client_store(
-                population.n_clients,
+                self.data.n_clients,
                 self.auxo.d_sketch,
                 table_capacity(fl, self.auxo),
             )
             self.trace = StreamingAvailability(
-                population.n_clients, seed=fl.seed, mode=fl.availability_mode
+                self.data.n_clients, seed=fl.seed, mode=fl.availability_mode
             )
         else:
             self.store = None
-            self.trace = AvailabilityTrace(population.n_clients, seed=fl.seed)
+            self.trace = AvailabilityTrace(self.data.n_clients, seed=fl.seed)
         self.churn = None  # optional ChurnStream, applied per step()
-        self.speeds = DeviceSpeeds(population.n_clients, sigma=fl.speed_sigma, seed=fl.seed)
-        n_corrupt = int(fl.corrupt_frac * population.n_clients)
-        self.corrupted = set(self.rng.choice(population.n_clients, n_corrupt, replace=False).tolist()) if n_corrupt else set()
+        self.speeds = DeviceSpeeds(self.data.n_clients, sigma=fl.speed_sigma, seed=fl.seed)
+        n_corrupt = int(fl.corrupt_frac * self.data.n_clients)
+        self.corrupted = set(self.rng.choice(self.data.n_clients, n_corrupt, replace=False).tolist()) if n_corrupt else set()
         self.history: List[Dict[str, Any]] = []
         self.resource_used = 0.0  # client local steps × batch (sample count)
         # client-held gradient fingerprints: EMA of centered+normalized
@@ -253,10 +266,10 @@ class AuxoEngine:
             self.neg_streak = ClientField(self.store, "neg_streak")
         else:
             self.fingerprint = np.zeros(
-                (population.n_clients, self.auxo.d_sketch), np.float32
+                (self.data.n_clients, self.auxo.d_sketch), np.float32
             )
-            self.fp_seen = np.zeros(population.n_clients, bool)
-            self.neg_streak = np.zeros(population.n_clients, np.int32)
+            self.fp_seen = np.zeros(self.data.n_clients, bool)
+            self.neg_streak = np.zeros(self.data.n_clients, np.int32)
         self.fp_beta = 0.4
         # cross-cohort sketch mean EMA: fingerprints are centered against a
         # GLOBAL reference (not the training cohort's mean) so they remain
@@ -358,8 +371,13 @@ class AuxoEngine:
         assert self.store is not None, (
             "churn requires FLConfig.population_store=True"
         )
-        self.store.depart(np.asarray(departures, np.int64))
-        self.store.arrive(np.asarray(arrivals, np.int64))
+        departures = np.asarray(departures, np.int64)
+        arrivals = np.asarray(arrivals, np.int64)
+        self.store.depart(departures)
+        self.store.arrive(arrivals)
+        # §⑦: churned ids drop their cached data-plane state (sizes, LRU
+        # shards) — a re-arrival re-derives everything from its id
+        self.data.invalidate(np.concatenate([departures, arrivals]))
 
     def _apply_partition(self, event: PartitionEvent):
         """Warm-start children + seed child rewards (kept for direct use)."""
@@ -386,22 +404,28 @@ class AuxoEngine:
         cs = np.asarray(cs, np.int64)
         miss = self._probe_cache.missing(cs)
         if miss.size:
-            xs, ys = [], []
-            for c in miss:  # cheap host draws; the device work is batched
-                rng = np.random.default_rng(700_001 + int(c))
-                x, y = self.pop.sample_batch(
-                    int(c), self.fl.batch_size, self.fl.local_steps, rng
-                )
-                xs.append(x)
-                ys.append(y)
-            keys = jax.vmap(jax.random.key)(jnp.asarray(miss))
+            # §⑦: deterministic per-id draws through the data plane (the
+            # materialized plane reproduces the seed engine's
+            # default_rng(700_001 + id) loop bit-for-bit). The batch pads
+            # to a power-of-two bucket (repeating the first miss id) so a
+            # varying miss count — per evaluate call, or per round via the
+            # warm-rearrival matching policy — reuses one compiled width
+            # instead of retracing the vmapped probe train; rows are
+            # independent under vmap, so the padded rows change nothing.
+            n = miss.size
+            pad = 1 << max(0, n - 1).bit_length()
+            mpad = np.concatenate([miss, np.full(pad - n, miss[0], np.int64)])
+            xs, ys = self.data.probe_batches(
+                mpad, self.fl.batch_size, self.fl.local_steps
+            )
+            keys = jax.vmap(jax.random.key)(jnp.asarray(mpad))
             deltas, _ = self._vmapped_probe_train(
                 self.pipeline.bank.params_of("0"),
-                jnp.asarray(np.stack(xs)),
-                jnp.asarray(np.stack(ys)),
+                jnp.asarray(xs),
+                jnp.asarray(ys),
                 keys,
             )
-            sk = np.asarray(self._vmapped_sketch(deltas))
+            sk = np.asarray(self._vmapped_sketch(deltas))[:n]
             ctr = sk - self.global_mu[None, :]
             ctr /= np.linalg.norm(ctr, axis=1, keepdims=True) + 1e-9
             self._probe_cache.put(miss, ctr.astype(np.float32))
@@ -426,7 +450,7 @@ class AuxoEngine:
         rescue) before falling back.
         """
         cs = (
-            np.arange(self.pop.n_clients, dtype=np.int64)
+            np.arange(self.data.n_clients, dtype=np.int64)
             if clients is None
             else np.asarray(clients, np.int64)
         )
@@ -487,17 +511,21 @@ class AuxoEngine:
         leaves = self.coordinator.tree.leaves()
         cohorts = self.cohorts
         serving = self.serving_cohorts()
+        tx, ty = self.data.eval_batches()  # stacked per-group test sets (§⑦)
         accs_by = {}
         for cid in set(serving) | set(leaves):
             p = cohorts[cid].params
             accs_by[cid] = {
-                g: self.task.accuracy(p, self.pop.test_x[g], self.pop.test_y[g])
-                for g in range(self.pop.n_groups)
+                g: self.task.accuracy(p, tx[g], ty[g])
+                for g in range(self.data.n_groups)
             }
+        groups = self.data.client_groups(
+            np.arange(self.data.n_clients, dtype=np.int64)
+        )
         per_client = np.array(
             [
-                accs_by[serving[c]][self.pop.clients[c].group]
-                for c in range(self.pop.n_clients)
+                accs_by[serving[c]][int(groups[c])]
+                for c in range(self.data.n_clients)
             ]
         )
         srt = np.sort(per_client)
@@ -528,21 +556,20 @@ class AuxoEngine:
         """
         self.pipeline.flush()
         cs = np.arange(
-            0, self.pop.n_clients, max(1, self.pop.n_clients // 100)
+            0, self.data.n_clients, max(1, self.data.n_clients // 100)
         )
         serving = self.serving_cohorts(cs)
         bank = self.pipeline.bank
         slots = jnp.asarray([bank.slot_of[l] for l in serving])
         prow = jax.tree.map(lambda a: a[slots], bank.params)
-        xs, ys = self.pop.sample_batches(cs, self.fl.batch_size, steps, self.rng)
+        xs, ys = self.data.sample_batches(cs, self.fl.batch_size, steps, self.rng)
         deltas, _ = self._vmapped_train_rows(
             prow, jnp.asarray(xs), jnp.asarray(ys), jax.random.key(0)
         )
         pf = jax.tree.map(lambda a, b: a + b, prow, deltas)
-        groups = np.array([self.pop.clients[int(c)].group for c in cs])
+        groups = self.data.client_groups(cs)
+        tx, ty = self.data.eval_batches()
         if hasattr(self.task, "correct_fraction"):
-            tx = np.stack([self.pop.test_x[g] for g in range(self.pop.n_groups)])
-            ty = np.stack([self.pop.test_y[g] for g in range(self.pop.n_groups)])
             accs = jax.vmap(self.task.correct_fraction)(
                 pf, jnp.asarray(tx[groups]), jnp.asarray(ty[groups])
             )
@@ -551,9 +578,7 @@ class AuxoEngine:
         for j in range(cs.size):  # tasks without a traceable accuracy
             p = jax.tree.map(lambda a: a[j], pf)
             g = int(groups[j])
-            accs.append(
-                self.task.accuracy(p, self.pop.test_x[g], self.pop.test_y[g])
-            )
+            accs.append(self.task.accuracy(p, tx[g], ty[g]))
         return float(np.mean(accs))
 
 

@@ -453,10 +453,11 @@ class RoundPipeline:
                 self.table.capacity, self.bank.capacity
             )
         else:
-            self.table = AffinityTable(engine.pop.n_clients, self.bank.capacity)
+            self.table = AffinityTable(engine.data.n_clients, self.bank.capacity)
         # full-population id vector for use_availability=False rounds,
-        # computed ONCE (was a per-round O(N) allocation)
-        self._all_ids = np.arange(engine.pop.n_clients, dtype=np.int64)
+        # computed ONCE (was a per-round O(N) allocation) and LAZILY — an
+        # availability-sampled million-client run never materializes it
+        self._all_ids_cache: Optional[np.ndarray] = None
         # flat execution width: the full round budget, fixed for the run.
         # L·quota(L) ≤ max(int(P·oc), 2·L) for every leaf count L, so this
         # width fits every partition state without a reshape.
@@ -498,6 +499,14 @@ class RoundPipeline:
         }
         self._exec_step = self._make_exec_step()
 
+    @property
+    def _all_ids(self) -> np.ndarray:
+        if self._all_ids_cache is None:
+            self._all_ids_cache = np.arange(
+                self.eng.data.n_clients, dtype=np.int64
+            )
+        return self._all_ids_cache
+
     def _timed(self, key: str, fn, *args):
         t0 = time.perf_counter()
         try:
@@ -519,7 +528,7 @@ class RoundPipeline:
             else:
                 avail = np.asarray(eng.trace.available(r, eng.rng))
         else:
-            avail = self._all_ids  # computed once in __init__
+            avail = self._all_ids  # materialized lazily, once
         store = getattr(eng, "store", None)
         if store is not None and store.n_departed:
             avail = avail[store.alive(avail)]  # churned-out clients skip rounds
@@ -618,7 +627,9 @@ class RoundPipeline:
         if not fl.allow_cross_cohort_duplicates:
             check_cross_cohort_unique(client_rows, kept)
         self.dropped_rows += dropped
-        sizes = eng.pop.client_sizes(client_rows).astype(np.float32)
+        # §⑦: sizes come through the plane's paged cache (the overlap path
+        # hits this every round, one round ahead; churn invalidates)
+        sizes = eng.data.client_sizes(client_rows).astype(np.float32)
         return MatchPlan(
             round_idx=r,
             leaves=leaves,
@@ -721,8 +732,51 @@ class RoundPipeline:
                     )
                     if leaf in leaves:
                         want[j] = leaves.index(leaf)
+        # §⑥/⑦ churn-aware matching (FLConfig.warm_rearrivals): a
+        # re-arrival's check-ins probe the root model and seed its
+        # affinity from the probe fingerprint's nearest-identity leaf,
+        # instead of re-exploring cold (A/B in tests/test_population_scale).
+        # The marker is consumed on actual PARTICIPATION (stage-③ kept
+        # rows, see _consume_rearrivals), not here — an available client
+        # the quota never selects stays warm for its next check-in. Note
+        # the probe is a device dispatch: under round_overlap=1 it rides
+        # the plan path and can stall the §⑤ schedule on churn-heavy
+        # rounds — the policy is opt-in and aimed at sync/ablation runs.
+        store = getattr(eng, "store", None)
+        if (
+            eng.fl.warm_rearrivals
+            and store is not None
+            and "rearrived" in store.field_names  # pre-§⑦ checkpoints lack it
+            and eng.global_mu_seen
+            and len(eng.coordinator.identity) >= 2
+        ):
+            warm = store.gather("rearrived", avail)
+            if warm.any():
+                pf = eng._probe_fingerprints(avail[warm])
+                best, _m, il = eng.coordinator.match_many(pf)
+                # the one-line policy: check in at the nearest identity
+                want[warm] = np.array([leaves.index(l) for l in il])[best]
         claimed = known_any & (want == exploit)
         return want, claimed
+
+    def _consume_rearrivals(self, plan: MatchPlan):
+        """One-shot warm-rearrival markers clear when a re-arrival actually
+        LANDS a kept row (it now holds a real reward record): clearing at
+        match time would waste the seed on clients the quota skipped, or on
+        plans a partition flush later discards."""
+        eng = self.eng
+        store = getattr(eng, "store", None)
+        if (
+            not eng.fl.warm_rearrivals
+            or store is None
+            or "rearrived" not in store.field_names
+        ):
+            return
+        kept_ids = plan.client_rows[plan.kept]
+        if kept_ids.size:
+            warm = store.gather("rearrived", kept_ids)
+            if warm.any():
+                store.scatter("rearrived", kept_ids[warm], False)
 
     # ------------------------------------------------------------ stage ②
     def _make_exec_step(self):
@@ -839,7 +893,7 @@ class RoundPipeline:
         B = plan.slot_rows.shape[0]
         order_real = plan.order[: plan.n_real]
         cids = plan.client_rows[order_real]
-        xs_r, ys_r = eng.pop.sample_batches(
+        xs_r, ys_r = eng.data.sample_batches(
             cids, fl.batch_size, fl.local_steps, eng.rng
         )
         if eng.corrupted:
@@ -848,7 +902,7 @@ class RoundPipeline:
             )
             if bad.any():
                 ys_r[bad] = eng.rng.integers(
-                    0, eng.pop.n_classes, size=ys_r[bad].shape
+                    0, eng.data.n_classes, size=ys_r[bad].shape
                 ).astype(ys_r.dtype)
         xs = np.zeros((B,) + xs_r.shape[1:], xs_r.dtype)
         ys = np.zeros((B,) + ys_r.shape[1:], ys_r.dtype)
@@ -1015,6 +1069,7 @@ class RoundPipeline:
         nact = len(plan.active)
         if nact == 0:
             return False
+        self._consume_rearrivals(plan)
         rows_by = [
             np.nonzero(plan.kept & (plan.slot_rows == self.bank.slot_of[leaf]))[0]
             for leaf in plan.active

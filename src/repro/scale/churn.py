@@ -14,7 +14,15 @@ it never touches the full population:
   ``return_rate`` per round. A re-arrival is a COLD START: it holds no
   fingerprint, so evaluation-time serving routes it through the
   probe-fingerprint path (one local probe round against the root model),
-  exactly like a never-trained client.
+  exactly like a never-trained client. With ``FLConfig.warm_rearrivals``
+  the first check-in is additionally seeded into the probe fingerprint's
+  nearest-identity leaf instead of re-exploring at random.
+
+Re-arrivals need no data-side restore either: the §⑦ DataPlane serves any
+client by ID (`AuxoEngine.apply_churn` just invalidates the plane's
+caches) — with a ProceduralDataPlane the returning client's shard
+regenerates from its hash-seeded stream, byte-identical, with no table of
+per-client arrays anywhere.
 
 Events draw from a per-round seeded substream, so a given round's churn is
 a function of (seed, round history) only.

@@ -251,6 +251,11 @@ class PopulationStore:
             for f in self._specs.values():
                 if f.name != "departed":
                     self.put(f.name, back, f.default)
+            if "rearrived" in self._specs:
+                # mark GENUINE re-arrivals (rows that had departed) so the
+                # warm-rearrival matching policy (FLConfig.warm_rearrivals)
+                # can seed their first check-in from a probe fingerprint
+                self.put("rearrived", back, True)
         self.put("departed", rows, False)
         self.n_departed -= int(was.sum())
 
@@ -278,6 +283,9 @@ def make_client_store(
         FieldSpec("probe_fp", (d_sketch,), np.float32, 0.0),
         FieldSpec("probe_seen", (), np.bool_, False),
         FieldSpec("departed", (), np.bool_, False),
+        # re-arrival marker: set when a departed row returns, consumed
+        # (one-shot) by the warm-rearrival matching policy
+        FieldSpec("rearrived", (), np.bool_, False),
     ]
     return PopulationStore(fields, n_clients=n_clients, chunk_rows=chunk_rows)
 

@@ -1,11 +1,14 @@
-"""npz pytree checkpoint roundtrip (+ chunked PopulationStore state)."""
+"""npz pytree checkpoint roundtrip (+ chunked PopulationStore state and
+§⑦ DataPlane specs)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import (
+    load_data_plane,
     load_population_store,
     load_pytree,
+    save_data_plane,
     save_population_store,
     save_pytree,
 )
@@ -60,6 +63,48 @@ def test_population_store_roundtrip(tmp_path):
     untouched = np.setdiff1d(np.arange(2000, dtype=np.int64), ids)[:50]
     assert (loaded.rows_of(untouched) == -1).all()
     np.testing.assert_array_equal(loaded.alive(ids[:10]), np.zeros(10, bool))
+
+
+def test_data_plane_spec_roundtrip(tmp_path):
+    """Planes checkpoint as a RECIPE (a few scalars, no client arrays) and
+    rebuild bit-identical data — procedural and materialized alike."""
+    import pytest
+
+    from repro.data import (
+        FederatedClassification,
+        MaterializedDataPlane,
+        ProceduralDataPlane,
+        make_population,
+    )
+
+    proc = ProceduralDataPlane(
+        n_clients=50_000, n_groups=3, seed=13, label_conflict=0.5
+    )
+    save_data_plane(tmp_path / "proc.npz", proc)
+    assert (tmp_path / "proc.npz").stat().st_size < 10_000  # spec, not arrays
+    back = load_data_plane(tmp_path / "proc.npz")
+    assert isinstance(back, ProceduralDataPlane)
+    ids = np.array([1, 42_000, 7], np.int64)
+    np.testing.assert_array_equal(proc.client_sizes(ids), back.client_sizes(ids))
+    x1, y1 = proc.sample_batches(ids, 4, 2, np.random.default_rng(2))
+    x2, y2 = back.sample_batches(ids, 4, 2, np.random.default_rng(2))
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+
+    pop = make_population(n_clients=40, n_groups=2, seed=4, test_per_group=16)
+    save_data_plane(tmp_path / "mat.npz", MaterializedDataPlane(pop))
+    mat = load_data_plane(tmp_path / "mat.npz")
+    assert isinstance(mat, MaterializedDataPlane)
+    np.testing.assert_array_equal(mat.pop.clients[7].x, pop.clients[7].x)
+    np.testing.assert_array_equal(mat.eval_batches()[1][0], pop.test_y[0])
+
+    # a plane wrapping hand-built arrays has no recipe: refuse, don't guess
+    bare = FederatedClassification(
+        clients=pop.clients, test_x=pop.test_x, test_y=pop.test_y,
+        n_classes=pop.n_classes, dim=pop.dim, n_groups=pop.n_groups,
+    )
+    with pytest.raises(ValueError):
+        save_data_plane(tmp_path / "bare.npz", MaterializedDataPlane(bare))
 
 
 def test_population_store_roundtrip_alongside_bank(tmp_path):

@@ -1,0 +1,261 @@
+"""§⑦ DataPlane protocol: procedural determinism, materialized/procedural
+statistical equivalence, and full-engine equivalence through both planes."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data import (
+    MaterializedDataPlane,
+    ProceduralDataPlane,
+    as_plane,
+    make_population,
+)
+from repro.fl import AuxoConfig, AuxoEngine, FLConfig
+from repro.fl.task import MLPTask
+
+POP_KW = dict(
+    n_clients=300, n_groups=4, group_sep=0.0, dirichlet=3.0,
+    label_conflict=1.0, seed=5,
+)
+
+
+def _fl(rounds=24, **kw):
+    base = dict(
+        rounds=rounds, participants_per_round=60, eval_every=rounds - 1,
+        use_availability=False, seed=5,
+    )
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _auxo():
+    return AuxoConfig(
+        d_sketch=64, cluster_k=2, max_cohorts=3, clustering_start_frac=0.03,
+        partition_start_frac=0.08, partition_end_frac=0.9, min_members=6,
+        margin_threshold=0.35,
+    )
+
+
+def _assert_banks_equal(eng_a: AuxoEngine, eng_b: AuxoEngine):
+    assert eng_a.coordinator.tree.leaves() == eng_b.coordinator.tree.leaves()
+    for cid in eng_a.coordinator.tree.leaves():
+        for a, b in zip(
+            jax.tree.leaves(eng_a.pipeline.bank.params_of(cid)),
+            jax.tree.leaves(eng_b.pipeline.bank.params_of(cid)),
+        ):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# materialized plane: bit-for-bit the raw-population engine
+# ---------------------------------------------------------------------------
+def test_materialized_plane_is_bit_equal_to_raw_population():
+    """Passing a FederatedClassification directly and wrapping it in an
+    explicit MaterializedDataPlane drive IDENTICAL engines — sync and
+    under §⑤ round overlap (same rng calls, same arrays, same models)."""
+    pop = make_population(**POP_KW)
+    task = MLPTask(dim=pop.dim, n_classes=pop.n_classes)
+    for overlap in (0, 1):
+        fl = _fl(round_overlap=overlap)
+        eng_a = AuxoEngine(task, pop, fl, _auxo())
+        eng_b = AuxoEngine(task, MaterializedDataPlane(pop), fl, _auxo())
+        hist_a = eng_a.run()
+        hist_b = eng_b.run()
+        _assert_banks_equal(eng_a, eng_b)
+        np.testing.assert_array_equal(
+            hist_a[-1]["per_client"], hist_b[-1]["per_client"]
+        )
+
+
+def test_as_plane_coercion():
+    pop = make_population(n_clients=20, n_groups=2, seed=0, test_per_group=8)
+    plane = as_plane(pop)
+    assert isinstance(plane, MaterializedDataPlane)
+    assert as_plane(plane) is plane  # planes pass through
+    with pytest.raises(TypeError):
+        as_plane([1, 2, 3])
+    # protocol views agree with the population
+    ids = np.arange(20)
+    np.testing.assert_array_equal(plane.client_groups(ids), pop.client_groups())
+    np.testing.assert_array_equal(plane.client_sizes(ids), pop.client_sizes(ids))
+    tx, ty = plane.eval_batches()
+    np.testing.assert_array_equal(tx[1], pop.test_x[1])
+    np.testing.assert_array_equal(ty[1], pop.test_y[1])
+    tx0, _ = plane.eval_batches([1])
+    np.testing.assert_array_equal(tx0[0], pop.test_x[1])
+
+
+def test_materialized_ragged_test_sets_stay_indexable():
+    """Hand-built populations may hold unequal per-group test sets; the
+    plane serves them per-group (object array) instead of raising."""
+    from repro.data import FederatedClassification
+    from repro.data.datasets import ClientData
+
+    rng = np.random.default_rng(0)
+    clients = [
+        ClientData(
+            x=rng.normal(size=(10, 4)).astype(np.float32),
+            y=rng.integers(0, 3, 10).astype(np.int32),
+            group=i % 2,
+        )
+        for i in range(6)
+    ]
+    pop = FederatedClassification(
+        clients=clients,
+        test_x={0: rng.normal(size=(16, 4)).astype(np.float32),
+                1: rng.normal(size=(20, 4)).astype(np.float32)},
+        test_y={0: rng.integers(0, 3, 16).astype(np.int32),
+                1: rng.integers(0, 3, 20).astype(np.int32)},
+        n_classes=3, dim=4, n_groups=2,
+    )
+    tx, ty = MaterializedDataPlane(pop).eval_batches()
+    np.testing.assert_array_equal(tx[0], pop.test_x[0])
+    np.testing.assert_array_equal(tx[1], pop.test_x[1])
+    np.testing.assert_array_equal(ty[1], pop.test_y[1])
+
+
+# ---------------------------------------------------------------------------
+# procedural plane: hash-seeded determinism
+# ---------------------------------------------------------------------------
+def test_procedural_determinism_across_instances_and_orders():
+    """Same id + same spec ⇒ same shard/batch, regardless of which other
+    ids were touched first, LRU evictions, or which instance serves it."""
+    kw = dict(n_clients=100_000, n_groups=4, seed=9)
+    p1 = ProceduralDataPlane(**kw)
+    p2 = ProceduralDataPlane(**kw, shard_cache=2)  # tiny LRU: evict + regen
+    ids = np.array([3, 77_123, 5, 99_999], np.int64)
+    # p2 visits OTHER clients first, in reverse order, with evictions
+    for c in [50, 60, 70] + ids[::-1].tolist():
+        p2._shard(int(c))
+    np.testing.assert_array_equal(p1.client_sizes(ids), p2.client_sizes(ids))
+    for c in ids:
+        x1, y1 = p1._shard(int(c))
+        x2, y2 = p2._shard(int(c))
+        np.testing.assert_array_equal(x1, x2)
+        np.testing.assert_array_equal(y1, y2)
+    # identical rng stream ⇒ identical sampled batches across instances
+    bx1, by1 = p1.sample_batches(ids, 8, 3, np.random.default_rng(4))
+    bx2, by2 = p2.sample_batches(ids, 8, 3, np.random.default_rng(4))
+    np.testing.assert_array_equal(bx1, bx2)
+    np.testing.assert_array_equal(by1, by2)
+    # probe draws need no rng at all: deterministic per id, repeatable
+    px1, py1 = p1.probe_batches(ids, 8, 2)
+    px2, py2 = p2.probe_batches(ids, 8, 2)
+    np.testing.assert_array_equal(px1, px2)
+    np.testing.assert_array_equal(py1, py2)
+    # eval sets regenerate identically too
+    np.testing.assert_array_equal(p1.eval_batches()[0], p2.eval_batches()[0])
+    # invalidation drops caches but never changes the data (ids ARE the table)
+    p1.invalidate(ids[:2])
+    x1b, _ = p1._shard(int(ids[0]))
+    np.testing.assert_array_equal(x1b, p2._shard(int(ids[0]))[0])
+
+
+def test_procedural_resident_bytes_independent_of_n():
+    small = ProceduralDataPlane(n_clients=10_000, seed=1, shard_cache=64)
+    big = ProceduralDataPlane(n_clients=10_000_000, seed=1, shard_cache=64)
+    rng = np.random.default_rng(0)
+    for p in (small, big):
+        ids = rng.integers(0, p.n_clients, 200)
+        p.sample_batches(ids, 4, 2, np.random.default_rng(1))
+        p.eval_batches()
+    assert big.data_nbytes < 2 * small.data_nbytes
+    assert len(big._shards) <= 64  # LRU bound holds
+
+
+def test_size_cache_hits_and_churn_invalidation():
+    calls = []
+
+    class Counting(ProceduralDataPlane):
+        def _compute_sizes(self, ids):
+            calls.append(ids.copy())
+            return super()._compute_sizes(ids)
+
+    p = Counting(n_clients=1000, seed=3)
+    ids = np.array([5, 9, 5, 700])
+    s1 = p.client_sizes(ids)
+    assert len(calls) == 1 and calls[0].size == 3  # unique misses only
+    s2 = p.client_sizes(ids)
+    np.testing.assert_array_equal(s1, s2)
+    assert len(calls) == 1  # pure cache hit: no recompute
+    p.invalidate(np.array([9]))
+    p.client_sizes(ids)
+    assert len(calls) == 2 and calls[1].tolist() == [9]  # only the churned id
+    np.testing.assert_array_equal(p.client_sizes(ids), s1)  # same hash stream
+
+
+# ---------------------------------------------------------------------------
+# materialized vs procedural: same latent structure, same statistics
+# ---------------------------------------------------------------------------
+def test_procedural_matches_materialized_group_structure():
+    """Both planes built from one spec share the group-level generative
+    structure BIT-FOR-BIT (same seed header stream), and their per-group
+    label priors agree statistically (hash stream vs sequential stream)."""
+    kw = dict(POP_KW, n_clients=240)
+    pop = make_population(**kw)
+    mat = MaterializedDataPlane(pop)
+    proc = ProceduralDataPlane(**kw)
+    ids = np.arange(240, dtype=np.int64)
+    np.testing.assert_array_equal(proc.client_groups(ids), mat.client_groups(ids))
+    # identical structure draw: the procedural test sets' label histogram
+    # per group tracks the materialized ones (same group priors + perms)
+    _, ty_m = mat.eval_batches()
+    _, ty_p = proc.eval_batches()
+    for g in range(4):
+        hm = np.bincount(ty_m[g], minlength=10) / ty_m[g].size
+        hp = np.bincount(ty_p[g], minlength=10) / ty_p[g].size
+        assert 0.5 * np.abs(hm - hp).sum() < 0.08, (g, hm, hp)  # TV distance
+    # per-group aggregate label prior over CLIENT shards agrees too
+    rng = np.random.default_rng(11)
+    bx_m, by_m = mat.sample_batches(ids, 16, 4, rng)
+    bx_p, by_p = proc.sample_batches(ids, 16, 4, np.random.default_rng(11))
+    groups = proc.client_groups(ids)
+    for g in range(4):
+        hm = np.bincount(by_m[groups == g].ravel(), minlength=10)
+        hp = np.bincount(by_p[groups == g].ravel(), minlength=10)
+        hm = hm / hm.sum()
+        hp = hp / hp.sum()
+        assert 0.5 * np.abs(hm - hp).sum() < 0.12, (g, hm, hp)
+        # features: same group transform ⇒ close per-group feature means
+        mu_m = bx_m[groups == g].reshape(-1, proc.dim).mean(0)
+        mu_p = bx_p[groups == g].reshape(-1, proc.dim).mean(0)
+        assert np.linalg.norm(mu_m - mu_p) < 0.35 * max(
+            np.linalg.norm(mu_m), 1.0
+        ), (g, np.linalg.norm(mu_m - mu_p))
+    # size distributions: same lognormal family
+    sm = np.log(mat.client_sizes(ids))
+    sp = np.log(proc.client_sizes(ids))
+    assert abs(sm.mean() - sp.mean()) < 0.25
+    assert abs(sm.std() - sp.std()) < 0.25
+
+
+# ---------------------------------------------------------------------------
+# full engine through the procedural plane: dense path ≡ population store
+# ---------------------------------------------------------------------------
+def test_procedural_engine_dense_equals_population_store():
+    """The §⑥ equivalence holds with a STREAMING data plane too: an engine
+    on ProceduralDataPlane with population_store=True is bit-for-bit the
+    dense-table engine on the same plane spec (the seed path)."""
+    kw = dict(POP_KW, n_clients=300)
+    task = MLPTask(dim=32, n_classes=10)
+    fl = _fl(rounds=24)
+    eng_a = AuxoEngine(task, ProceduralDataPlane(**kw), fl, _auxo())
+    eng_b = AuxoEngine(
+        task,
+        ProceduralDataPlane(**kw),
+        dataclasses.replace(fl, population_store=True),
+        _auxo(),
+    )
+    hist_a = eng_a.run()
+    hist_b = eng_b.run()
+    _assert_banks_equal(eng_a, eng_b)
+    rw, kn, cl = eng_b.pipeline.table.to_dense(300)
+    np.testing.assert_array_equal(eng_a.pipeline.table.reward, rw)
+    np.testing.assert_array_equal(eng_a.pipeline.table.known, kn)
+    np.testing.assert_array_equal(eng_a.pipeline.table.cluster_idx, cl)
+    np.testing.assert_array_equal(
+        hist_a[-1]["per_client"], hist_b[-1]["per_client"]
+    )
+    assert np.isfinite(hist_a[-1]["acc_mean"])

@@ -342,6 +342,58 @@ def test_churn_departure_and_probe_rearrival():
     assert len(calls) == 1  # second serve hits the store-backed cache
 
 
+def test_warm_rearrival_matching_ab():
+    """A/B of FLConfig.warm_rearrivals: cold re-arrivals re-explore at
+    random (no reward records ⇒ uniform draw over leaves), warm ones seed
+    their first check-in from the probe fingerprint's nearest-identity
+    leaf — and the one-shot marker clears once consumed."""
+    task, pop, fl, auxo = _scenario(rounds=30)
+    agree = {}
+    for warm in (False, True):
+        eng = AuxoEngine(
+            task, pop,
+            dataclasses.replace(
+                fl, population_store=True, warm_rearrivals=warm
+            ),
+            auxo,
+        )
+        for r in range(fl.rounds):
+            eng.step(r)
+        eng.pipeline.flush()
+        leaves = eng.coordinator.tree.leaves()
+        assert len(leaves) >= 2 and len(eng.coordinator.identity) >= 2
+        trained = np.flatnonzero(
+            eng.store.to_dense("fp_seen", pop.n_clients)
+        )[:40]
+        eng.apply_churn(departures=trained)
+        eng.apply_churn(arrivals=trained)
+        np.testing.assert_array_equal(
+            eng.store.gather("rearrived", trained), np.ones(trained.size, bool)
+        )
+        slots = np.array([eng.pipeline.bank.slot_of[l] for l in leaves])
+        want, _ = eng.pipeline._match_vectorized(
+            fl.rounds, trained, leaves, slots
+        )
+        # nearest-identity assignment from the (cached) probe fingerprints
+        best, _m, il = eng.coordinator.match_many(
+            eng._probe_fingerprints(trained)
+        )
+        expected = np.array([leaves.index(l) for l in il])[best]
+        agree[warm] = float(np.mean(want == expected))
+        # matching does NOT consume the marker (the quota may skip the
+        # client); it clears on actual kept participation in a real round
+        assert eng.store.gather("rearrived", trained).all()
+        eng.step(fl.rounds)
+        eng.pipeline.flush()
+        remaining = eng.store.gather("rearrived", trained)
+        if warm:
+            assert remaining.sum() < trained.size  # kept rows consumed seeds
+        else:
+            assert remaining.all()  # cold policy never touches the marker
+    assert agree[True] == 1.0  # every re-arrival seeded at its nearest leaf
+    assert agree[False] < 0.8  # cold: uniform exploration over leaves
+
+
 def test_rearrival_is_cold_even_after_late_feedback():
     """§⑤ overlap can deliver feedback for a round that was in flight when
     a client departed, re-writing its wiped row; the cold-start contract
