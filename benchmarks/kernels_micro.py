@@ -40,6 +40,22 @@ def run():
         oracle2_us = _time(jax.jit(lambda a, b: ref.segment_aggregate(a, b, K)), x, ids)
         rows.append(dict(kernel="segment_aggregate", P=P, D=D, K=K,
                          max_err=err2, oracle_us=oracle2_us))
+    # decode_attention: the §⑧ serving plane's hot kernel — sweep KV
+    # lengths and GQA group sizes (H/Hkv) against the jnp oracle
+    B, hd = 8, 64
+    for (S, H, Hkv) in [(512, 8, 8), (2048, 8, 2), (8192, 16, 2)]:
+        kq = jax.random.fold_in(key, S * H + Hkv)
+        q = jax.random.normal(jax.random.fold_in(kq, 0), (B, H, hd))
+        k = jax.random.normal(jax.random.fold_in(kq, 1), (B, S, Hkv, hd))
+        v = jax.random.normal(jax.random.fold_in(kq, 2), (B, S, Hkv, hd))
+        length = jnp.full((B,), S - S // 4, jnp.int32)  # masked tail
+        got3 = ops.decode_attention(q, k, v, length)
+        want3 = ref.decode_attention(q, k, v, length)
+        err3 = float(jnp.max(jnp.abs(got3 - want3)))
+        oracle3_us = _time(jax.jit(ref.decode_attention), q, k, v, length)
+        rows.append(dict(kernel="decode_attention", B=B, S=S, H=H, Hkv=Hkv,
+                         group=H // Hkv, max_err=err3,
+                         oracle_us=oracle3_us))
     emit(rows, "Kernel microbenchmarks")
     return rows
 

@@ -1,0 +1,324 @@
+"""Serving-plane load benchmark: batched admission, overlap, Pallas decode.
+
+Drives the §⑧ serving plane (`src/repro/serve/`) with a synthetic
+production stream (Poisson arrivals, hot/cold client-identity mix) against
+a trained Auxo engine and measures:
+
+- **batched vs per-query** — queries/sec and p50/p99 latency draining a
+  10⁴-query burst through pow2-bucketed admission batches (ONE fused
+  gather-from-bank inference dispatch per batch) vs one dispatch per
+  query (the naive baseline). Acceptance: batched ≥ 5x QPS.
+- **idle vs concurrent-with-training** — the same burst served while a
+  §⑤ overlapped training round is IN FLIGHT (queries dispatched into the
+  host-side gap, reading the `serve_params` round-boundary snapshot).
+  Acceptance: concurrent throughput ≥ 0.5x idle.
+- **Pallas vs ref decode** — the paged per-cohort KV decode route
+  (`kernels/decode_attention.py`) against the pure-jnp oracle: greedy
+  token streams must BIT-MATCH; tok/s and max |logit err| reported.
+
+Latency model: the burst drains as fast as the device allows; a query's
+latency is the wall-clock from drain start to completion of ITS admitted
+batch (arrival times shape the batches via the admission deadline, not
+the replay clock).
+
+--smoke (CI) runs a reduced burst and asserts the structural tripwires:
+O(1) device dispatches per admitted batch (one inference + at most one
+probe batch), probe-cache hits on replay, and resident KV-cache bytes
+∝ live cohorts (rows double when cohorts double; no N-client term).
+
+Writes BENCH_serving_load.json at the repo root unless --smoke.
+
+Usage:  python benchmarks/serving_load.py [--queries 10000] [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import sys
+import time
+from pathlib import Path
+
+# single-threaded host BLAS (see round_overlap.py) — must precede numpy
+for _v in ("OPENBLAS_NUM_THREADS", "OMP_NUM_THREADS", "MKL_NUM_THREADS"):
+    os.environ.setdefault(_v, "1")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.configs import get_config, reduce_config  # noqa: E402
+from repro.data import make_population  # noqa: E402
+from repro.fl import AuxoConfig, AuxoEngine, FLConfig  # noqa: E402
+from repro.fl.task import MLPTask  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.serve import (  # noqa: E402
+    CohortDecoder,
+    QueryStream,
+    ServingPlane,
+    StreamConfig,
+)
+from round_latency import force_leaves  # noqa: E402
+
+
+def make_engine(overlap: int, n_leaves: int, rounds: int, seed: int,
+                n_clients: int = 1000):
+    pop = make_population(
+        n_clients=n_clients, n_groups=4, group_sep=0.0, dirichlet=3.0,
+        label_conflict=1.0, seed=seed,
+    )
+    task = MLPTask(dim=pop.dim, n_classes=pop.n_classes)
+    fl = FLConfig(
+        rounds=rounds + 8, participants_per_round=128, local_steps=3,
+        batch_size=16, eval_every=10_000, use_availability=False,
+        seed=seed, round_overlap=overlap,
+    )
+    auxo = AuxoConfig(
+        d_sketch=64, cluster_k=2, max_cohorts=max(8, n_leaves),
+        clustering_start_frac=0.03, partition_start_frac=2.0,
+        min_members=6, margin_threshold=0.35,
+    )
+    eng = AuxoEngine(task, pop, fl, auxo)
+    force_leaves(eng, n_leaves)
+    for r in range(rounds):
+        eng.step(r)
+    eng.pipeline.flush()
+    return eng, pop
+
+
+def drain(plane: ServingPlane, batches, params) -> dict:
+    """Serve admitted batches back-to-back; per-query latency = wall time
+    from drain start to the query's batch completing."""
+    lat = []
+    t0 = time.perf_counter()
+    for b in batches:
+        plane.serve_batch(b.ids, params)
+        t = time.perf_counter() - t0
+        lat.extend([t] * b.ids.size)
+    total = time.perf_counter() - t0
+    lat = np.asarray(lat)
+    return {
+        "queries": int(lat.size),
+        "seconds": total,
+        "qps": lat.size / total,
+        "p50_ms": float(np.percentile(lat, 50) * 1e3),
+        "p99_ms": float(np.percentile(lat, 99) * 1e3),
+    }
+
+
+def bench_admission(eng, pop, n_queries: int, hot_frac: float, seed: int,
+                    max_batch: int, per_query_slice: int) -> dict:
+    ids = np.arange(pop.n_clients, dtype=np.int64)
+    hot = ids[np.asarray(eng.fp_seen[ids], bool)]
+    cold = np.setdiff1d(ids, hot)
+    stream = QueryStream(
+        StreamConfig(n_queries=n_queries, rate=50_000.0, hot_frac=hot_frac,
+                     seed=seed),
+        hot, cold,
+    )
+    plane = ServingPlane(eng, max_batch=max_batch)
+    params = plane.snapshot()
+    batches = plane.batcher.admit(stream)
+    # warm pass: compile every pow2 inference width and populate the
+    # probe/input caches — the timed drain measures the STANDING plane's
+    # steady state, not tracing or first-contact cache fills
+    for b in batches:
+        plane.serve_batch(b.ids, params)
+    d0_inf, d0_probe = plane.infer_dispatches, eng.probe_train_dispatches
+    batched = drain(plane, batches, params)
+    batched["batches"] = len(batches)
+    batched["infer_dispatches"] = plane.infer_dispatches - d0_inf
+    batched["probe_dispatches"] = eng.probe_train_dispatches - d0_probe
+
+    # per-query baseline: one admission + one dispatch per query, measured
+    # on a slice and reported as QPS (the full burst would take minutes)
+    naive = ServingPlane(eng, max_batch=1, bucket_min=1)
+    sl = stream.ids[:per_query_slice]
+    for c in sl[: min(64, sl.size)]:
+        naive.serve_batch(np.asarray([c], np.int64), params)  # warm pass
+    t0 = time.perf_counter()
+    for c in sl:
+        naive.serve_batch(np.asarray([c], np.int64), params)
+    per_query = {
+        "queries": int(sl.size),
+        "qps": sl.size / (time.perf_counter() - t0),
+    }
+    return {
+        "hot": int(hot.size),
+        "cold": int(cold.size),
+        "hot_frac": hot_frac,
+        "max_batch": max_batch,
+        "batched": batched,
+        "per_query": per_query,
+        "speedup": batched["qps"] / per_query["qps"],
+    }
+
+
+def bench_overlap(eng, pop, n_queries: int, hot_frac: float, seed: int,
+                  max_batch: int, round_idx: int) -> dict:
+    """Idle drain vs the same drain with a training round in flight."""
+    assert eng.pipeline.overlap == 1
+    ids = np.arange(pop.n_clients, dtype=np.int64)
+    hot = ids[np.asarray(eng.fp_seen[ids], bool)]
+    cold = np.setdiff1d(ids, hot)
+    stream = QueryStream(
+        StreamConfig(n_queries=n_queries, rate=50_000.0, hot_frac=hot_frac,
+                     seed=seed),
+        hot, cold,
+    )
+    plane = ServingPlane(eng, max_batch=max_batch)
+    batches = plane.batcher.admit(stream)
+    params = plane.snapshot()
+    for b in batches:
+        plane.serve_batch(b.ids, params)  # full warm pass (steady state)
+    idle = drain(plane, batches, params)
+
+    # dispatch round `round_idx` and serve the burst while it is in flight
+    # — the serving reads stay on the round-boundary snapshot
+    eng.step(round_idx)
+    assert eng.pipeline._inflight is not None, "round must be in flight"
+    params = plane.snapshot()
+    concurrent = drain(plane, batches, params)
+    eng.pipeline.flush()
+    return {
+        "idle": idle,
+        "concurrent": concurrent,
+        "throughput_ratio": concurrent["qps"] / idle["qps"],
+    }
+
+
+def bench_decode(steps: int, lanes: int) -> dict:
+    cfg = reduce_config(get_config("qwen3-8b")).replace(
+        d_model=64, vocab=256, n_layers=2
+    )
+    model = build_model(cfg)
+    key = jax.random.key(0)
+    ps = [model.init(jax.random.fold_in(key, i)) for i in range(8)]
+    bank = jax.tree.map(lambda *a: jax.numpy.stack(a), *ps)
+
+    def run(backend, live):
+        dec = CohortDecoder(
+            model, lambda: bank, lambda: list(live), lanes=lanes,
+            page_size=128, backend=backend,
+        )
+        dec.decode(2)  # compile + first pages
+        t0 = time.perf_counter()
+        toks, logits = dec.decode(steps)
+        dt = time.perf_counter() - t0
+        return dec, toks, logits, toks.size / dt
+
+    live4 = [0, 1, 2, 3]
+    dec_p, tok_p, lg_p, tps_p = run("pallas", live4)
+    dec_r, tok_r, lg_r, tps_r = run("ref", live4)
+    bit_match = bool(np.array_equal(tok_p, tok_r))
+    max_err = float(np.abs(lg_p - lg_r).max())
+    # KV-cache residency ∝ live cohorts: doubling the cohort set doubles
+    # the page rows; nothing scales with the client population (the cache
+    # has no N-client dimension at all)
+    dec_2, *_ = run("ref", [0, 1])
+    kv2, kv4 = dec_2.kv_nbytes, dec_p.kv_nbytes
+    return {
+        "cohorts": len(live4),
+        "lanes": lanes,
+        "steps": steps,
+        "pallas_tok_s": tps_p,
+        "ref_tok_s": tps_r,
+        "bit_match": bit_match,
+        "max_logit_err": max_err,
+        "kv_bytes_2_cohorts": int(kv2),
+        "kv_bytes_4_cohorts": int(kv4),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--queries", type=int, default=10_000)
+    ap.add_argument("--clients", type=int, default=1000)
+    ap.add_argument("--warmup-rounds", type=int, default=15)
+    ap.add_argument("--cohorts", type=int, default=4)
+    ap.add_argument("--max-batch", type=int, default=256)
+    ap.add_argument("--hot-frac", type=float, default=0.9)
+    ap.add_argument("--per-query-slice", type=int, default=1000)
+    ap.add_argument("--decode-steps", type=int, default=32)
+    ap.add_argument("--lanes", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: reduced burst + structural tripwires")
+    args = ap.parse_args()
+    if args.smoke:
+        args.queries, args.clients = 2000, 400
+        args.warmup_rounds, args.per_query_slice = 6, 200
+        args.decode_steps = 6
+
+    eng, pop = make_engine(1, args.cohorts, args.warmup_rounds, args.seed,
+                           n_clients=args.clients)
+    adm = bench_admission(eng, pop, args.queries, args.hot_frac, args.seed,
+                          args.max_batch, args.per_query_slice)
+    ovl = bench_overlap(eng, pop, args.queries, args.hot_frac, args.seed,
+                        args.max_batch, round_idx=args.warmup_rounds)
+    dec = bench_decode(args.decode_steps, args.lanes)
+
+    print(
+        f"burst {args.queries}: batched {adm['batched']['qps']:.0f} q/s "
+        f"(p50 {adm['batched']['p50_ms']:.1f} ms, "
+        f"p99 {adm['batched']['p99_ms']:.1f} ms) vs per-query "
+        f"{adm['per_query']['qps']:.0f} q/s -> {adm['speedup']:.1f}x"
+    )
+    print(
+        f"overlap: idle {ovl['idle']['qps']:.0f} q/s "
+        f"(p99 {ovl['idle']['p99_ms']:.1f} ms), concurrent "
+        f"{ovl['concurrent']['qps']:.0f} q/s "
+        f"(p99 {ovl['concurrent']['p99_ms']:.1f} ms) -> "
+        f"{ovl['throughput_ratio']:.2f}x"
+    )
+    print(
+        f"decode: pallas {dec['pallas_tok_s']:.0f} tok/s, ref "
+        f"{dec['ref_tok_s']:.0f} tok/s, bit_match={dec['bit_match']}, "
+        f"max |logit err| {dec['max_logit_err']:.2e}"
+    )
+
+    # structural tripwires (CI): O(1) dispatches per admitted batch —
+    # one fused inference, at most one probe batch
+    b = adm["batched"]
+    assert b["infer_dispatches"] == b["batches"], (
+        b["infer_dispatches"], b["batches"])
+    assert b["probe_dispatches"] <= b["batches"], (
+        b["probe_dispatches"], b["batches"])
+    # KV residency ∝ live cohorts, not N: 2 -> 4 cohorts doubles the rows
+    assert dec["kv_bytes_4_cohorts"] == 2 * dec["kv_bytes_2_cohorts"], dec
+    assert dec["bit_match"], "Pallas decode must bit-match the ref oracle"
+
+    if args.smoke:
+        # reduced burst: the batching win is smaller but must be clear
+        assert adm["speedup"] >= 3.0, adm["speedup"]
+        assert ovl["throughput_ratio"] >= 0.3, ovl["throughput_ratio"]
+        print("smoke OK: O(1) dispatches/batch + KV ∝ cohorts + bit-match")
+        return
+
+    # full-run acceptance gates
+    assert adm["speedup"] >= 5.0, adm["speedup"]
+    assert ovl["throughput_ratio"] >= 0.5, ovl["throughput_ratio"]
+
+    out = {
+        "benchmark": "serving_load",
+        "queries": args.queries,
+        "clients": args.clients,
+        "cohorts": args.cohorts,
+        "max_batch": args.max_batch,
+        "hot_frac": args.hot_frac,
+        "admission": adm,
+        "overlap": ovl,
+        "decode": dec,
+    }
+    path = Path(__file__).resolve().parent.parent / "BENCH_serving_load.json"
+    path.write_text(json.dumps(out, indent=2) + "\n")
+    print(json.dumps({k: v for k, v in out.items()
+                      if k not in ("admission", "overlap", "decode")},
+                     indent=2))
+
+
+if __name__ == "__main__":
+    main()

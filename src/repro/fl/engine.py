@@ -308,6 +308,9 @@ class AuxoEngine:
             StoreProbeCache(self.store) if self.store is not None else DictProbeCache()
         )
         self._probe_cache_key = -1
+        # vmapped probe-train dispatch count (serving-plane tripwires: all
+        # cache misses of a call must batch into ONE device dispatch)
+        self.probe_train_dispatches = 0
         self.pipeline = RoundPipeline(self, mode=fl.execution)
 
     # -------------------------------------------------------------- views
@@ -373,6 +376,10 @@ class AuxoEngine:
         )
         departures = np.asarray(departures, np.int64)
         arrivals = np.asarray(arrivals, np.int64)
+        # drop cached probe fingerprints FIRST: a departure wipes all soft
+        # state, and a re-arrival with the same id must re-probe cold — a
+        # cached pre-departure fingerprint would route it on stale identity
+        self._probe_cache.drop(np.concatenate([departures, arrivals]))
         self.store.depart(departures)
         self.store.arrive(arrivals)
         # §⑦: churned ids drop their cached data-plane state (sizes, LRU
@@ -384,8 +391,13 @@ class AuxoEngine:
         self.pipeline._apply_partition(event, self.coordinator.tree.leaves())
 
     # ----------------------------------------------------------------- eval
-    def _probe_fingerprints(self, cs: np.ndarray) -> np.ndarray:
+    def _probe_fingerprints(self, cs: np.ndarray, root_params=None) -> np.ndarray:
         """Serve-time probe fingerprints for never-trained clients, batched.
+
+        `root_params` overrides the ROOT model the probes train against
+        (default: the live bank's slot "0") — the §⑧ serving plane passes
+        its round-boundary snapshot so probes never read a half-applied
+        bank while a training round is in flight.
 
         Each client runs its usual local steps against the ROOT model; the
         updates are sketched and centered against the global reference mean
@@ -419,8 +431,11 @@ class AuxoEngine:
                 mpad, self.fl.batch_size, self.fl.local_steps
             )
             keys = jax.vmap(jax.random.key)(jnp.asarray(mpad))
+            if root_params is None:
+                root_params = self.pipeline.bank.params_of("0")
+            self.probe_train_dispatches += 1
             deltas, _ = self._vmapped_probe_train(
-                self.pipeline.bank.params_of("0"),
+                root_params,
                 jnp.asarray(xs),
                 jnp.asarray(ys),
                 keys,

@@ -493,6 +493,14 @@ class RoundPipeline:
         self._inflight = None  # (plan, res) dispatched but not yet retired
         self._staged: Optional[Tuple[int, Any, Any]] = None  # (round, plan, packed)
         self.flushes = 0  # partition-triggered pipeline flushes
+        # §⑧ serving snapshot: the newest bank state CONSISTENT with the
+        # host tables (round boundary). With the overlap on, the live
+        # bank.params are round-r futures while the tables still hold
+        # round r-1 — the serving plane must never pair them. run_round
+        # republishes this after every feedback application; a partition
+        # flush refreshes it from the drained bank (a pre-partition
+        # snapshot would expose child slots that were not spawned yet).
+        self.serve_params = self.bank.params
         # cumulative host wall-time per stage (benchmarks/round_overlap.py)
         self.stage_seconds = {
             "plan": 0.0, "pack": 0.0, "dispatch": 0.0, "feedback": 0.0
@@ -1260,6 +1268,7 @@ class RoundPipeline:
         """
         if self._retire():
             self._staged = None
+        self.serve_params = self.bank.params
 
     def run_round(self, r: int):
         if not self.overlap:
@@ -1268,6 +1277,7 @@ class RoundPipeline:
                 return
             res = self.execute(plan)
             self.apply_feedback(plan, res)
+            self.serve_params = self.bank.params
             return
         # §⑤ depth-2 overlapped schedule. Host-visible order per call:
         #   fetch round r-1's sketches/losses (the ONLY device dependency
@@ -1286,6 +1296,10 @@ class RoundPipeline:
             _, plan, packed = staged
         else:
             _, plan, packed = self._plan_and_pack(r)
+        # serving snapshot candidate: the bank BEFORE round r's dispatch
+        # replaces it with futures. prev's fetch above already drained the
+        # queue, so these leaves are concrete round r-1 values.
+        pre = self.bank.params
         res = self.execute(plan, packed) if plan is not None else None
         events = prev is not None and self.apply_feedback(*prev)
         if plan is not None:
@@ -1298,6 +1312,11 @@ class RoundPipeline:
                 self.apply_feedback(plan, res)
             else:
                 self._inflight = (plan, res)
+        # publish the serving snapshot for the gap ahead: boundary r-1
+        # while round r stays in flight, boundary r if it was drained (a
+        # flush also reseeded tables, so only the post-partition bank
+        # matches them)
+        self.serve_params = self.bank.params if self._inflight is None else pre
         # stage round r+1 against the current tables: they are missing only
         # round r's feedback (in flight) — stale by exactly one round
         self._staged = self._plan_and_pack(r + 1)

@@ -331,6 +331,11 @@ class DictProbeCache(dict):
     def get_many(self, cs) -> np.ndarray:
         return np.stack([self[int(c)] for c in cs])
 
+    def drop(self, cs):
+        """Invalidate entries for churned ids (departures / re-arrivals)."""
+        for c in cs:
+            self.pop(int(c), None)
+
 
 class StoreProbeCache:
     """Store-backed probe-fingerprint cache: same protocol as DictProbeCache
@@ -362,6 +367,23 @@ class StoreProbeCache:
             self.store.put("probe_seen", r, False)
             return out
         return default
+
+    def drop(self, cs):
+        """Invalidate entries for churned ids (departures / re-arrivals).
+
+        `depart` happens to wipe probe rows with the rest of the record,
+        but churn-time invalidation is a CONTRACT of the probe cache (a
+        re-arrival must re-probe cold), not an accident of the store's
+        wipe set — so it is explicit here, and only touches materialized
+        rows (an id without a row has nothing cached).
+        """
+        cs = np.asarray(cs, np.int64)
+        if cs.size == 0:
+            return
+        r = self.store.rows_of(cs)
+        r = r[r >= 0]
+        if r.size:
+            self.store.put("probe_seen", r, False)
 
     def clear(self):
         self.store.fill("probe_seen", False)

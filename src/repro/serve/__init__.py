@@ -1,0 +1,31 @@
+"""§⑧ production serving plane.
+
+Layers (ARCHITECTURE.md §⑧):
+
+- `stream`    — synthetic production query stream (Poisson arrivals,
+                hot/cold client-identity mix)
+- `admission` — arrival accumulation into fixed-shape pow2 batches
+- `plane`     — batched routing (cached probe + match_many) and ONE
+                gather-from-CohortBank vmapped inference dispatch per
+                admitted batch, always against the pipeline's
+                round-boundary `serve_params` snapshot
+- `kv_cache`  — paged per-cohort KV pages, freed/reallocated on partition
+                via the same slot discipline `spawn_children` uses
+- `decode`    — incremental per-cohort decode over the paged cache through
+                `kernels.ops.decode_attention` (Pallas) with the ref
+                kernel as oracle
+"""
+from repro.serve.admission import AdmissionBatcher
+from repro.serve.decode import CohortDecoder
+from repro.serve.kv_cache import PagedKVCache
+from repro.serve.plane import ServingPlane
+from repro.serve.stream import QueryStream, StreamConfig
+
+__all__ = [
+    "AdmissionBatcher",
+    "CohortDecoder",
+    "PagedKVCache",
+    "QueryStream",
+    "ServingPlane",
+    "StreamConfig",
+]

@@ -1,0 +1,192 @@
+"""Incremental per-cohort decode over the paged KV cache.
+
+The serving-plane fast path for `TransformerTask` cohort models: all live
+cohorts' decode lanes advance one token in ONE jitted dispatch — gather
+each cohort's params row from the (snapshot) stacked bank, vmap a
+single-row decode step over rows, greedy-pick the next token. Attention
+against the paged cache runs through `kernels.ops.decode_attention` (the
+Pallas flash-decode kernel; interpret mode off-TPU) with
+`kernels.ref.decode_attention` as the selectable bit-check oracle —
+backends must produce identical greedy token streams.
+
+The per-row step mirrors `models.transformer.decode_step` for the dense
+family, with the ring-buffer `attention_decode` swapped for a paged
+append + length-masked kernel call.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.models.common import (
+    default_positions,
+    mlp,
+    rmsnorm,
+    _qkv,
+)
+from repro.models.transformer import (
+    _scan_or_unroll_cache,
+    embed_tokens,
+    lm_logits,
+)
+from repro.serve.kv_cache import PagedKVCache
+
+ATTEND = {
+    "pallas": lambda q, k, v, n: kops.decode_attention(q, k, v, n),
+    "ref": lambda q, k, v, n: kref.decode_attention(q, k, v, n),
+}
+
+
+def make_row_decode_step(cfg, attend: Callable):
+    """One cohort row, one decode step. Vmapped over rows by the caller.
+
+    params: one bank row; tokens (lanes, 1) int32;
+    kc/vc (L, lanes, S, Hkv, hd); index scalar int32 (current position).
+    Returns (logits (lanes, V), new kc, new vc).
+    """
+    assert cfg.family == "dense", f"paged decode supports dense, got {cfg.family}"
+    assert not cfg.sliding_window, "paged decode is full-attention only"
+
+    def step(params, tokens, kc, vc, index):
+        x = embed_tokens(params, cfg, tokens)  # (lanes, 1, D)
+        positions = default_positions(cfg, tokens.shape[0], 1, offset=index)
+
+        def body(x, pc):
+            p, ck, cv = pc
+            xa = rmsnorm(p["attn_norm"], x, cfg.norm_eps)
+            q, k, v = _qkv(p["attn"], cfg, xa, positions)  # (lanes,1,H|Hkv,hd)
+            ck = jax.lax.dynamic_update_slice(
+                ck, k.astype(ck.dtype), (0, index, 0, 0)
+            )
+            cv = jax.lax.dynamic_update_slice(
+                cv, v.astype(cv.dtype), (0, index, 0, 0)
+            )
+            a = attend(q[:, 0], ck, cv, index + 1)  # (lanes, H, hd)
+            x = x + jnp.einsum("bhk,hkd->bd", a, p["attn"]["wo"])[:, None, :]
+            x = x + mlp(p["mlp"], rmsnorm(p["mlp_norm"], x, cfg.norm_eps))
+            return x, (ck, cv)
+
+        x, (ks, vs) = _scan_or_unroll_cache(
+            cfg, body, x, (params["backbone"]["blocks"], kc, vc)
+        )
+        x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        return lm_logits(params, cfg, x)[:, 0], ks, vs
+
+    return step
+
+
+class CohortDecoder:
+    """Fleet decoder: every live cohort × lane advances in one dispatch.
+
+    `params_fn` yields the stacked bank params to read (the serving
+    plane's round-boundary snapshot), `slots_fn` the live cohort slots;
+    `sync()` reconciles the paged cache against them with the bank's
+    slot-scatter discipline (pages freed on partition/merge).
+    """
+
+    def __init__(
+        self,
+        model,
+        params_fn: Callable,
+        slots_fn: Callable,
+        lanes: int = 4,
+        page_size: int = 128,
+        backend: str = "pallas",
+    ):
+        self.model = model
+        self.cfg = model.cfg
+        self.params_fn = params_fn
+        self.slots_fn = slots_fn
+        self.lanes = int(lanes)
+        self.backend = backend
+        self.cache = PagedKVCache(
+            n_layers=self.cfg.n_layers,
+            lanes=self.lanes,
+            n_kv_heads=self.cfg.n_kv_heads,
+            head_dim=self.cfg.hd,
+            page_size=page_size,
+            dtype=jnp.float32,
+        )
+        # one jitted fleet step; jax retraces per (rows, seq) bucket
+        self._step = jax.jit(jax.vmap(make_row_decode_step(self.cfg, ATTEND[backend])))
+        self.decode_dispatches = 0
+        self.tokens: Optional[np.ndarray] = None  # (rows, lanes) last token
+
+    @classmethod
+    def from_engine(cls, engine, **kw) -> "CohortDecoder":
+        model = engine.task.model  # TransformerTask
+        pipe = engine.pipeline
+
+        def slots_fn():
+            return [
+                pipe.bank.slot_of[l] for l in engine.coordinator.tree.leaves()
+            ]
+
+        return cls(
+            model, lambda: pipe.serve_params, slots_fn, **kw
+        )
+
+    # ------------------------------------------------------------ plumbing
+    @property
+    def kv_nbytes(self) -> int:
+        return self.cache.nbytes
+
+    def sync(self):
+        """Reconcile cache rows with the live cohort set (call after any
+        round that may have partitioned)."""
+        live = self.slots_fn()
+        if self.cache.slots != [int(s) for s in live]:
+            self.tokens = None  # fresh rows restart their lanes
+        self.cache.sync(live)
+
+    def _seed_tokens(self) -> np.ndarray:
+        # deterministic per (slot, lane) seed token
+        slots = np.asarray(self.cache.slots, np.int64)
+        lane = np.arange(self.lanes, dtype=np.int64)[None, :]
+        return ((slots[:, None] * self.lanes + lane) % self.cfg.vocab).astype(
+            np.int32
+        )
+
+    # -------------------------------------------------------------- decode
+    def decode(self, n_steps: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Greedy-decode `n_steps` tokens on every live cohort lane.
+
+        Returns (tokens (live_rows, lanes, n_steps) int32,
+                 last-step logits (live_rows, lanes, V) float32).
+        One jitted dispatch per step for the WHOLE fleet.
+        """
+        self.sync()
+        live = self.cache.slots
+        assert live, "no live cohorts to decode"
+        self.cache.ensure(n_steps + 1)
+        r_pad = self.cache.rows
+        # pad rows re-use row 0's slot params; their lanes are discarded
+        slots_p = np.asarray(
+            live + [live[0]] * (r_pad - len(live)), np.int64
+        )
+        if self.tokens is None:
+            self.tokens = self._seed_tokens()
+        tok = np.zeros((r_pad, self.lanes), np.int32)
+        tok[: len(live)] = self.tokens
+        tok = jnp.asarray(tok[:, :, None])  # (R, lanes, 1)
+        params = jax.tree.map(lambda a: a[slots_p], self.params_fn())
+        k, v = self.cache.k, self.cache.v
+        index = jnp.asarray(self.cache.index)
+        out = []
+        logits = None
+        for _ in range(int(n_steps)):
+            logits, k, v = self._step(params, tok, k, v, index)
+            self.decode_dispatches += 1
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, :, None]
+            index = index + 1
+            out.append(np.asarray(tok)[:, :, 0])
+        self.cache.k, self.cache.v = k, v
+        self.cache.index = np.asarray(index, np.int32)
+        toks = np.stack(out, axis=-1)  # (R, lanes, n_steps)
+        self.tokens = toks[: len(live), :, -1]
+        return toks[: len(live)], np.asarray(logits)[: len(live)]

@@ -1,0 +1,104 @@
+"""Paged per-cohort KV cache for the serving plane's decode fast path.
+
+One row of pages per LIVE cohort slot, stacked so the whole fleet decodes
+in one vmapped dispatch: k/v are (R, L, lanes, S, Hkv, hd) with R the
+pow2-bucketed live-cohort count, `lanes` concurrent decode streams per
+cohort, and S a pow2 number of `page_size`-token pages that doubles on
+demand. Resident bytes are therefore ∝ live cohorts — never ∝ N clients.
+
+Partition/merge discipline: `sync(live_slots)` reconciles rows against
+the current leaf slots with the same scatter idiom `spawn_children` uses
+on the bank (`new.at[dst].set(old[src])`) — rows of retained cohorts keep
+their pages and decode positions, rows of retired parents are freed, and
+fresh children start on zeroed pages at position 0.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, int(n) - 1).bit_length()
+
+
+class PagedKVCache:
+    def __init__(
+        self,
+        n_layers: int,
+        lanes: int,
+        n_kv_heads: int,
+        head_dim: int,
+        page_size: int = 128,
+        dtype=jnp.float32,
+    ):
+        self.L = int(n_layers)
+        self.lanes = int(lanes)
+        self.Hkv = int(n_kv_heads)
+        self.hd = int(head_dim)
+        self.page_size = int(page_size)
+        self.dtype = dtype
+        self.slots: List[int] = []  # row -> cohort bank slot
+        self.k = self.v = None      # (R, L, lanes, S, Hkv, hd)
+        self.index = np.zeros(0, np.int32)  # per-row decode position
+
+    # ------------------------------------------------------------- shape
+    @property
+    def rows(self) -> int:
+        return 0 if self.k is None else self.k.shape[0]
+
+    @property
+    def seq(self) -> int:
+        return 0 if self.k is None else self.k.shape[3]
+
+    @property
+    def pages(self) -> int:
+        return self.seq // self.page_size
+
+    @property
+    def nbytes(self) -> int:
+        return 0 if self.k is None else int(self.k.nbytes + self.v.nbytes)
+
+    def _zeros(self, r: int, s: int):
+        return jnp.zeros(
+            (r, self.L, self.lanes, s, self.Hkv, self.hd), self.dtype
+        )
+
+    # ---------------------------------------------------------- lifecycle
+    def sync(self, live_slots: Sequence[int]):
+        """Reconcile rows against the live cohort slots (partition/merge).
+
+        Retained slots keep their pages + position, vanished slots free
+        theirs, new slots allocate zeroed rows. No-op when the live set is
+        unchanged.
+        """
+        live = [int(s) for s in live_slots]
+        if live == self.slots and self.k is not None:
+            return
+        s = self.seq or self.page_size
+        r = max(1, _next_pow2(len(live)))
+        new_k, new_v = self._zeros(r, s), self._zeros(r, s)
+        new_index = np.zeros(r, np.int32)
+        old = {slot: i for i, slot in enumerate(self.slots)}
+        src = np.asarray(
+            [old[slot] for slot in live if slot in old], np.int64
+        )
+        dst = np.asarray(
+            [j for j, slot in enumerate(live) if slot in old], np.int64
+        )
+        if src.size:
+            new_k = new_k.at[dst].set(self.k[src])
+            new_v = new_v.at[dst].set(self.v[src])
+            new_index[dst] = self.index[src]
+        self.k, self.v, self.index, self.slots = new_k, new_v, new_index, live
+
+    def ensure(self, extra: int):
+        """Grow pages (doubling) so every live row fits `extra` more tokens."""
+        assert self.k is not None, "sync() before ensure()"
+        need = int(self.index.max(initial=0)) + int(extra)
+        while self.seq < need:
+            s = self.seq
+            self.k = jnp.concatenate([self.k, self._zeros(self.rows, s)], axis=3)
+            self.v = jnp.concatenate([self.v, self._zeros(self.rows, s)], axis=3)

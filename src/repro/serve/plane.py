@@ -1,0 +1,183 @@
+"""§⑧ serving plane: batched routing + one-dispatch per-cohort inference.
+
+A `ServingPlane` answers client queries against the training engine's
+cohort models. Per admitted batch:
+
+1. **route** — hot clients (training fingerprint in the store) and cold
+   clients (batched cached `_probe_fingerprints` probe, ONE vmapped
+   dispatch for all cache misses) are matched to cohort identities with
+   one `match_many` matrix product; an unconfident margin falls back to
+   the retained root generalist, exactly like `serving_cohorts`.
+2. **infer** — the mixed-cohort batch becomes ONE gather-from-CohortBank
+   vmapped step: gather each query's cohort slot row from the stacked
+   bank, vmap `task.logits`, argmax. O(1) device dispatches per batch,
+   however many cohorts it spans.
+
+All reads go through `pipeline.serve_params` — the round-boundary
+snapshot the §⑤ overlapped schedule republishes after each feedback
+application — so serving never pairs a half-applied bank with the host
+tables, idle or with a training round in flight.
+
+Deliberate delta vs `serving_cohorts` (documented in ARCHITECTURE.md §⑧):
+the plane skips the stale-EMA re-probe rescue and the per-client tree
+descent fallback — both are host loops tuned for offline evaluation; at
+serving rates an unconfident hot client simply gets the generalist.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.admission import AdmissionBatcher
+from repro.serve.stream import QueryStream
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, int(n) - 1).bit_length()
+
+
+class ServingPlane:
+    def __init__(
+        self,
+        engine,
+        max_batch: int = 256,
+        max_wait: float = 1e-3,
+        bucket_min: int = 8,
+    ):
+        self.eng = engine
+        self.batcher = AdmissionBatcher(max_batch=max_batch, max_wait=max_wait)
+        self.bucket_min = int(bucket_min)
+        # dispatch/observability counters (CI tripwires)
+        self.infer_dispatches = 0
+        self.batches_served = 0
+        self.queries_served = 0
+        self._infer_cache: Dict[int, object] = {}
+        # per-id query-input cache: the query payload is a deterministic
+        # data-plane draw per client, so a standing plane derives it once
+        # per id instead of per query (the host-side rng loop would
+        # otherwise dominate the drain). Bounded: cleared at 2^20 ids.
+        self._x_cache: Dict[int, np.ndarray] = {}
+
+    # ---------------------------------------------------------- snapshot
+    def snapshot(self):
+        """The round-boundary stacked bank params serving reads from."""
+        return self.eng.pipeline.serve_params
+
+    def _root_params(self, params):
+        s0 = self.eng.pipeline.bank.slot_of["0"]
+        return jax.tree.map(lambda a: a[s0], params)
+
+    # ------------------------------------------------------------ routing
+    def route_slots(self, ids, params=None) -> np.ndarray:
+        """Bank slot serving each query id (vectorized, one probe batch).
+
+        Mirrors `serving_cohorts`' fingerprint → match_many → confidence
+        routing, minus its offline-only host loops (see module docstring).
+        """
+        eng = self.eng
+        params = self.snapshot() if params is None else params
+        cs = np.asarray(ids, np.int64)
+        bank = eng.pipeline.bank
+        root = bank.slot_of["0"]
+        slots = np.full(cs.size, root, np.int64)
+        if cs.size == 0:
+            return slots
+        can_probe = (
+            eng.auxo.enabled
+            and eng.auxo.probe_serving
+            and eng.global_mu_seen
+            and len(eng.coordinator.identity) >= 2
+        )
+        have = np.asarray(eng.fp_seen[cs], bool)
+        fps = np.zeros((cs.size, eng.auxo.d_sketch), np.float32)
+        if have.any():
+            fps[have] = eng.fingerprint[cs[have]]
+        need = (~have) if can_probe else np.zeros(cs.size, bool)
+        if need.any():
+            # cold path: cached probe fingerprints against the SNAPSHOT
+            # root (all cache misses batch into one vmapped dispatch)
+            fps[need] = eng._probe_fingerprints(
+                cs[need], root_params=self._root_params(params)
+            )
+        has_fp = have | need
+        if has_fp.any():
+            sub = np.flatnonzero(has_fp)
+            best, margin, leaves = eng.coordinator.match_many(fps[sub])
+            if leaves:
+                leaf_slots = np.asarray(
+                    [bank.slot_of[l] for l in leaves], np.int64
+                )
+                conf = eng.auxo.serve_confidence
+                slots[sub] = np.where(
+                    margin >= conf, leaf_slots[best], root
+                )
+        return slots
+
+    # ---------------------------------------------------------- inference
+    def _infer_fn(self, width: int):
+        """Compiled one-dispatch batch inference at a pow2 width."""
+        if width not in self._infer_cache:
+            task = self.eng.task
+
+            def step(params, slots, x):
+                prow = jax.tree.map(lambda a: a[slots], params)
+
+                def one(p, xi):
+                    return jnp.argmax(task.logits(p, xi[None, :])[0], -1)
+
+                return jax.vmap(one)(prow, x)
+
+            self._infer_cache[width] = jax.jit(step)
+        return self._infer_cache[width]
+
+    def _query_inputs(self, ids: np.ndarray) -> np.ndarray:
+        """Each client's deterministic query payload, cached per id."""
+        miss = np.unique(
+            np.asarray([c for c in ids if int(c) not in self._x_cache],
+                       np.int64)
+        )
+        if miss.size:
+            if len(self._x_cache) > (1 << 20):
+                self._x_cache.clear()
+            xs, _ = self.eng.data.probe_batches(miss, 1, 1)
+            for j, c in enumerate(miss):
+                self._x_cache[int(c)] = xs[j, 0, 0]
+        return np.stack([self._x_cache[int(c)] for c in ids])
+
+    def serve_batch(self, ids, params=None) -> np.ndarray:
+        """Serve one admitted batch: route + ONE vmapped inference dispatch.
+
+        Returns per-query predicted classes. The query input is each
+        client's deterministic data-plane draw (`probe_batches`), so two
+        engines in the same training state return bit-identical answers.
+        """
+        ids = np.asarray(ids, np.int64)
+        if ids.size == 0:
+            return np.zeros(0, np.int64)
+        params = self.snapshot() if params is None else params
+        slots = self.route_slots(ids, params)
+        width = max(self.bucket_min, _next_pow2(ids.size))
+        pad = width - ids.size
+        ids_p = np.concatenate([ids, np.full(pad, ids[0], np.int64)])
+        slots_p = np.concatenate([slots, np.full(pad, slots[0], np.int64)])
+        x = self._query_inputs(ids_p)
+        preds = self._infer_fn(width)(
+            params, jnp.asarray(slots_p), jnp.asarray(x)
+        )
+        self.infer_dispatches += 1
+        self.batches_served += 1
+        self.queries_served += int(ids.size)
+        return np.asarray(preds)[: ids.size].astype(np.int64)
+
+    # ------------------------------------------------------------- stream
+    def serve_stream(
+        self, stream: QueryStream, params=None
+    ) -> Tuple[np.ndarray, List]:
+        """Admit + serve a whole stream; returns (preds, admitted batches)."""
+        params = self.snapshot() if params is None else params
+        batches = self.batcher.admit(stream)
+        preds = [self.serve_batch(b.ids, params) for b in batches]
+        return np.concatenate(preds) if preds else np.zeros(0, np.int64), batches
