@@ -1,9 +1,14 @@
-"""Checkpointing for cohort fault tolerance (paper §5.2).
+"""Checkpointing for cohort fault tolerance (paper §5.2) and whole-run
+elasticity (ARCHITECTURE.md §⑨).
 
 Pure numpy .npz per pytree (flattened with keystr paths) — no external
 dependency, works for params, optimizer state, and clustering state. The
 coordinator's own soft state has a separate pickle checkpoint
 (repro.core.coordinator.CohortCoordinator.checkpoint).
+
+``save_run``/``load_run`` capture an ENTIRE run — bank, tables, store,
+coordinator, rng streams, staged pipeline round — and restore it bit-equal,
+optionally onto a different ``cohort_shards`` mesh (elastic remesh).
 """
 from repro.checkpoint.npz import (
     load_data_plane,
@@ -13,6 +18,7 @@ from repro.checkpoint.npz import (
     save_population_store,
     save_pytree,
 )
+from repro.checkpoint.run_state import load_run, save_run
 
 __all__ = [
     "save_pytree",
@@ -21,4 +27,6 @@ __all__ = [
     "load_data_plane",
     "save_population_store",
     "load_population_store",
+    "save_run",
+    "load_run",
 ]

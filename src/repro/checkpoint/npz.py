@@ -20,6 +20,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import ml_dtypes
 import numpy as np
 
 from repro.data.datasets import make_population
@@ -31,14 +32,29 @@ from repro.data.plane import (
 from repro.scale.store import FieldSpec, PopulationStore
 
 
+# npz (the .npy container) has no bfloat16: such leaves are VIEW-cast to a
+# same-width integer dtype on save and viewed back on load — bit-exact, no
+# value rounding (an f32 round-trip would be lossless too, but 2x the bytes
+# and a dtype lie in the file). The marker dtype must be one numpy itself
+# owns so `np.load(allow_pickle=False)` stays happy.
+_VIEW_CAST = {np.dtype(ml_dtypes.bfloat16): np.dtype(np.uint16)}
+_VIEW_BACK = {v: k for k, v in _VIEW_CAST.items()}
+
+
 def save_pytree(path: str | Path, tree: Any):
+    def enc(leaf):
+        a = np.asarray(leaf)
+        store_as = _VIEW_CAST.get(a.dtype)
+        return a.view(store_as) if store_as is not None else a
+
     flat = jax.tree_util.tree_leaves_with_path(tree)
-    arrays = {jax.tree_util.keystr(p): np.asarray(l) for p, l in flat}
+    arrays = {jax.tree_util.keystr(p): enc(l) for p, l in flat}
     np.savez(path, **arrays)
 
 
 def load_pytree(path: str | Path, like: Any) -> Any:
-    """Restore into the structure of `like` (keys must match)."""
+    """Restore into the structure of `like` (keys must match; dtypes come
+    from `like`, so view-cast bfloat16 leaves restore bit-exactly)."""
     data = np.load(path, allow_pickle=False)
     flat = jax.tree_util.tree_leaves_with_path(like)
     leaves = []
@@ -49,6 +65,9 @@ def load_pytree(path: str | Path, like: Any) -> Any:
         arr = data[k]
         if tuple(arr.shape) != tuple(l.shape):
             raise ValueError(f"shape mismatch for {k}: {arr.shape} vs {l.shape}")
+        want = np.dtype(l.dtype)
+        if arr.dtype in _VIEW_BACK and _VIEW_BACK[arr.dtype] == want:
+            arr = arr.view(want)  # undo the save-side view-cast, bit-exact
         leaves.append(jnp.asarray(arr, dtype=l.dtype))
     return jax.tree_util.tree_unflatten(
         jax.tree_util.tree_structure(like), leaves

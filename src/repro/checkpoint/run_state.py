@@ -1,0 +1,509 @@
+"""Whole-run checkpoint/restore with elastic remesh (ARCHITECTURE.md §⑨).
+
+``save_run(path, engine)`` captures EVERYTHING a run is: the stacked
+CohortBank (params + opt state + clocks), the cohort tree with every
+clusterer's ClusterState and PRNG key, the affinity tables (dense or the
+chunked PopulationStore), client fingerprints and probe caches, the churn
+stream, the data-plane recipe, the host RNG stream state, the §⑤ pipeline's
+staged next-round plan, and the round cursor. ``load_run(path)`` rebuilds a
+live ``AuxoEngine`` that continues BIT-EQUAL to a run that never stopped
+(proven by tests/test_elastic_restore.py).
+
+Round overlap: ``save_run`` drains the pipeline via ``RoundPipeline.flush()``
+first — the in-flight round's feedback retires into the tables, and the
+staged next-round plan either survives (its one-round staleness is the
+steady-state §⑤ semantics; its host pack buffers are serialized and
+re-staged on load) or is discarded by a partition-triggered flush exactly
+like a live run's. A differential harness must therefore flush its
+continuous comparator at the save round too — checkpoints happen at round
+boundaries, the same place evaluation drains the pipeline.
+
+Remesh: slot ids are a function of the shard count (allocation n lives at
+slot ``(n % S)·slots_per_shard + n//S``), so restoring onto a different
+``cohort_shards`` RE-PACKS the live slots: saved state is canonicalized to
+allocation order (the layout-free key: 0 = root, then partition order) at
+save time, and scattered into the new layout's slots on load — through
+``launch/sharding.alloc_slots`` / ``scatter_allocations`` with the new
+bank's ``out_shardings`` pinned, the inverse discipline of
+``spawn_children``'s scatter. Affinity columns permute identically
+(``scale.store.remap_affinity_slots`` for the chunked store). Cross-layout
+bit-equality then follows from the engine's existing canonical-order
+invariants (MatchPlan.order + in-graph key derivation). The one exclusion:
+a STAGED plan's buffers are layout-bound (shard-local slot ids, exec
+width), so a remesh restore of a checkpoint holding one raises — save from
+``round_overlap=0``, or at a point where no plan is staged.
+
+Process caveat: a partition AFTER restore re-derives child-clusterer seeds
+via ``hash(child_id)`` (process-randomized for strings). Same-process
+save/load — and any run with PYTHONHASHSEED pinned — is exactly
+reproducible; a cross-process restore is statistically identical but may
+diverge bit-wise at the first NEW partition.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import json
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.npz import (
+    load_data_plane,
+    load_population_store,
+    load_pytree,
+    save_data_plane,
+    save_population_store,
+    save_pytree,
+)
+from repro.core.clustering import ClusterState, OnlineClustering
+from repro.core.cohort import CohortNode
+from repro.core.coordinator import CohortStats, PartitionEvent
+from repro.launch.sharding import alloc_slots, scatter_allocations
+from repro.scale.churn import ChurnStream
+from repro.scale.store import adopt_store_state, remap_affinity_slots
+
+_VERSION = 1
+
+# MatchPlan's array-valued fields, serialized verbatim (host numpy)
+_PLAN_ARRAYS = (
+    "slot_rows", "client_rows", "real", "kept", "claimed", "sizes",
+    "update_slots", "order",
+)
+
+
+def _jsonable(obj):
+    """Recursively coerce numpy scalars so json.dump accepts the meta dict."""
+    if isinstance(obj, dict):
+        return {k: _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    if isinstance(obj, (np.bool_,)):
+        return bool(obj)
+    return obj
+
+
+def _alloc_order_ids(bank) -> list:
+    """Cohort ids in allocation order (the layout-free canonical key)."""
+    return [bank.id_of[bank._alloc_slot(n)] for n in range(bank._next)]
+
+
+# ---------------------------------------------------------------------------
+# save
+# ---------------------------------------------------------------------------
+def save_run(path: str | Path, engine, next_round: Optional[int] = None):
+    """Checkpoint the ENTIRE run into directory `path`.
+
+    Drains the §⑤ pipeline first (``flush()``), so the saved tables are
+    consistent with the saved bank — the same boundary evaluation uses.
+    `next_round` defaults to ``engine.round_cursor`` (the round a resumed
+    driver loop should run next).
+    """
+    eng = engine
+    pipe = eng.pipeline
+    bank = pipe.bank
+    pipe.flush()
+    if next_round is None:
+        next_round = eng.round_cursor
+
+    path = Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+
+    # ---- canonical (allocation-order) bank state
+    alloc_ids = _alloc_order_ids(bank)
+    A = len(alloc_ids)
+    old_slots = alloc_slots(A, bank.capacity, bank.n_shards)
+    canon = lambda t: jax.tree.map(  # noqa: E731
+        lambda a: np.asarray(a)[old_slots], t
+    )
+    save_pytree(path / "bank_params.npz", canon(bank.params))
+    save_pytree(path / "bank_opt.npz", canon(bank.opt_state))
+
+    arrays: Dict[str, np.ndarray] = {
+        "bank:clock": bank.clock[old_slots],
+        "bank:rounds": bank.rounds[old_slots],
+    }
+
+    # ---- affinity tables: dense -> canonical columns; store -> whole store
+    # in its OLD layout (load remaps columns through the same permutation)
+    if eng.store is not None:
+        save_population_store(path / "store.npz", eng.store)
+    else:
+        tbl = pipe.table
+        arrays["table:reward"] = tbl.reward[:, old_slots]
+        arrays["table:known"] = tbl.known[:, old_slots]
+        arrays["table:cluster_idx"] = tbl.cluster_idx[:, old_slots]
+        # dense client state (store mode keeps these inside the store)
+        arrays["fp:fingerprint"] = np.asarray(eng.fingerprint)
+        arrays["fp:seen"] = np.asarray(eng.fp_seen)
+        arrays["fp:neg"] = np.asarray(eng.neg_streak)
+        pids = np.fromiter(eng._probe_cache.keys(), np.int64,
+                           len(eng._probe_cache))
+        arrays["probe:ids"] = pids
+        arrays["probe:vals"] = (
+            np.stack([eng._probe_cache[int(c)] for c in pids])
+            if pids.size
+            else np.zeros((0, eng.auxo.d_sketch), np.float32)
+        )
+
+    # ---- coordinator: tree + clusterers + identities + bookkeeping
+    co = eng.coordinator
+    for cid, cl in co.clusterers.items():
+        for f in dataclasses.fields(ClusterState):
+            arrays[f"clu:{cid}:{f.name}"] = np.asarray(getattr(cl.state, f.name))
+        arrays[f"clu:{cid}:key"] = np.asarray(jax.random.key_data(cl._key))
+    for cid, ident in co.identity.items():
+        arrays[f"ident:{cid}"] = np.asarray(ident, np.float32)
+
+    # ---- engine soft state
+    arrays["eng:global_mu"] = np.asarray(eng.global_mu, np.float32)
+    for i, h in enumerate(eng.history):
+        pc = h.get("per_client")
+        if pc is not None:
+            arrays[f"hist:{i}:per_client"] = np.asarray(pc)
+    if eng.churn is not None:
+        arrays["churn:away"] = np.asarray(eng.churn.away, np.int64)
+
+    # ---- §⑤ staged next-round plan (post-flush: either a live plan whose
+    # host pack buffers ride along, or an empty-round marker, or nothing)
+    staged_meta: Optional[Dict[str, Any]] = None
+    if pipe._staged is not None:
+        r, plan, _packed = pipe._staged
+        assert r == next_round, (r, next_round)
+        staged_meta = {"round": int(r), "has_plan": plan is not None}
+        if plan is not None:
+            assert pipe._staged_host is not None, (
+                "staged plan without host buffers — overlap bookkeeping bug"
+            )
+            for name in _PLAN_ARRAYS:
+                arrays[f"plan:{name}"] = np.asarray(getattr(plan, name))
+            xs, ys, inv = pipe._staged_host
+            arrays["planbuf:xs"] = xs
+            arrays["planbuf:ys"] = ys
+            arrays["planbuf:inv"] = inv
+            staged_meta.update(
+                round_idx=int(plan.round_idx),
+                leaves=list(plan.leaves),
+                active=list(plan.active),
+                durations={k: float(v) for k, v in plan.durations.items()},
+                key_seed=int(plan.key_seed),
+                n_real=int(plan.n_real),
+                dropped=int(plan.dropped),
+            )
+
+    np.savez(path / "arrays.npz", **arrays)
+
+    # ---- data plane: a recipe, or the caller's responsibility
+    spec = eng.data.plane_spec()
+    if spec is not None:
+        save_data_plane(path / "data_plane.npz", eng.data)
+
+    # ---- scalar/meta state
+    task = eng.task
+    meta = {
+        "version": _VERSION,
+        "next_round": int(next_round),
+        "fl": dataclasses.asdict(eng.fl),
+        "auxo": dataclasses.asdict(eng.auxo),
+        "task": {
+            "module": type(task).__module__,
+            "cls": type(task).__qualname__,
+            "fields": (
+                dataclasses.asdict(task)
+                if dataclasses.is_dataclass(task)
+                else None
+            ),
+        },
+        "has_plane": spec is not None,
+        "n_clients": int(eng.data.n_clients),
+        "alloc_ids": alloc_ids,
+        "old_shards": int(bank.n_shards),
+        "old_capacity": int(bank.capacity),
+        "exec_width": int(pipe.exec_width),
+        "rng_state": eng.rng.bit_generator.state,
+        "resource_used": float(eng.resource_used),
+        "global_mu_seen": bool(eng.global_mu_seen),
+        "fp_beta": float(eng.fp_beta),
+        "probe_cache_key": int(eng._probe_cache_key),
+        "probe_train_dispatches": int(eng.probe_train_dispatches),
+        "pipeline": {
+            "exec_dispatches": int(pipe.exec_dispatches),
+            "dropped_rows": int(pipe.dropped_rows),
+            "flushes": int(pipe.flushes),
+        },
+        "staged": staged_meta,
+        "coordinator": {
+            # INSERTION ORDER is load-bearing: tree.leaves() iterates the
+            # nodes dict, and the leaf order drives the per-leaf RNG draws
+            # of every future MatchPlan — json objects preserve it
+            "tree": {
+                cid: {"parent": n.parent, "children": list(n.children)}
+                for cid, n in co.tree.nodes.items()
+            },
+            "clusterer_ids": list(co.clusterers.keys()),
+            "ema": float(next(iter(co.clusterers.values())).ema),
+            "identity_ids": list(co.identity.keys()),
+            "stats": {
+                cid: dataclasses.asdict(st) for cid, st in co.stats.items()
+            },
+            "strikes": {str(k): int(v) for k, v in co.strikes.items()},
+            "blacklist": sorted(int(c) for c in co.blacklist),
+            "partitions": [
+                {
+                    "parent": p.parent,
+                    "children": list(p.children),
+                    "round_idx": int(p.round_idx),
+                    "cluster_to_child": {
+                        str(k): v for k, v in p.cluster_to_child.items()
+                    },
+                }
+                for p in co.partitions
+            ],
+        },
+        "history": [
+            {k: _jsonable(v) for k, v in h.items() if k != "per_client"}
+            for h in eng.history
+        ],
+        "churn": (
+            None
+            if eng.churn is None
+            else {
+                "n_clients": int(eng.churn.n_clients),
+                "depart_rate": float(eng.churn.depart_rate),
+                "return_rate": float(eng.churn.return_rate),
+                "seed": int(eng.churn.seed),
+            }
+        ),
+    }
+    with open(path / "meta.json", "w") as f:
+        json.dump(_jsonable(meta), f)
+
+
+# ---------------------------------------------------------------------------
+# load
+# ---------------------------------------------------------------------------
+def load_run(
+    path: str | Path,
+    cohort_shards: Optional[int] = None,
+    population=None,
+    task=None,
+):
+    """Rebuild a live engine from a ``save_run`` checkpoint.
+
+    `cohort_shards` restores onto a DIFFERENT mesh (elastic remesh): live
+    bank slots, clocks, and affinity columns re-pack into the new layout's
+    slot ids; everything canonical (allocation order, rng streams, in-graph
+    keys) is layout-free, so the continued run stays bit-equal to the old
+    layout's. `population` supplies the data plane when the checkpoint
+    holds no recipe (opaque MaterializedDataPlane); `task` overrides the
+    recorded task spec (required for non-dataclass tasks).
+
+    Returns the engine; resume the driver loop at ``engine.round_cursor``.
+    """
+    from repro.fl.engine import AuxoConfig, AuxoEngine, FLConfig
+
+    path = Path(path)
+    with open(path / "meta.json") as f:
+        meta = json.load(f)
+    assert meta["version"] == _VERSION, meta["version"]
+    data = np.load(path / "arrays.npz", allow_pickle=False)
+
+    fl = FLConfig(**meta["fl"])
+    if cohort_shards is not None:
+        fl.cohort_shards = int(cohort_shards)
+    auxo = AuxoConfig(**meta["auxo"])
+
+    staged = meta["staged"]
+    if (
+        staged is not None
+        and staged["has_plan"]
+        and max(1, int(fl.cohort_shards or 1)) != meta["old_shards"]
+    ):
+        raise ValueError(
+            "checkpoint holds a staged plan packed for "
+            f"cohort_shards={meta['old_shards']}; its buffers are "
+            "layout-bound and cannot restore onto "
+            f"{fl.cohort_shards} shards — save from round_overlap=0 or at "
+            "a point with no staged plan to remesh"
+        )
+
+    if task is None:
+        tmeta = meta["task"]
+        cls = getattr(importlib.import_module(tmeta["module"]), tmeta["cls"])
+        if tmeta["fields"] is None:
+            raise ValueError(
+                f"task {tmeta['cls']} is not a dataclass; pass task= to "
+                "load_run"
+            )
+        task = cls(**tmeta["fields"])
+    if population is None:
+        if not meta["has_plane"]:
+            raise ValueError(
+                "checkpoint holds no data-plane recipe (opaque plane); "
+                "pass population= to load_run"
+            )
+        population = load_data_plane(path / "data_plane.npz")
+
+    eng = AuxoEngine(task, population, fl, auxo)
+    assert eng.data.n_clients == meta["n_clients"], (
+        eng.data.n_clients, meta["n_clients"]
+    )
+    pipe = eng.pipeline
+    bank = pipe.bank
+
+    # ---- coordinator (tree first: node insertion order drives leaf order)
+    co = eng.coordinator
+    for cid, node in meta["coordinator"]["tree"].items():
+        if cid != co.tree.root:
+            co.tree.nodes[cid] = CohortNode(cid, node["parent"])
+    for cid, node in meta["coordinator"]["tree"].items():
+        co.tree.nodes[cid].children = list(node["children"])
+    ema = meta["coordinator"]["ema"]
+    co.clusterers = {}
+    for cid in meta["coordinator"]["clusterer_ids"]:
+        cl = OnlineClustering(co.cluster_k, co.d_sketch, ema=ema, seed=0)
+        cl.state = ClusterState(
+            **{
+                f.name: jnp.asarray(data[f"clu:{cid}:{f.name}"])
+                for f in dataclasses.fields(ClusterState)
+            }
+        )
+        cl._key = jax.random.wrap_key_data(jnp.asarray(data[f"clu:{cid}:key"]))
+        co.clusterers[cid] = cl
+    co.identity = {
+        cid: data[f"ident:{cid}"].copy()
+        for cid in meta["coordinator"]["identity_ids"]
+    }
+    co.stats = {
+        cid: CohortStats(**st)
+        for cid, st in meta["coordinator"]["stats"].items()
+    }
+    co.strikes = {int(k): v for k, v in meta["coordinator"]["strikes"].items()}
+    co.blacklist = set(meta["coordinator"]["blacklist"])
+    co.partitions = [
+        PartitionEvent(
+            parent=p["parent"],
+            children=list(p["children"]),
+            round_idx=p["round_idx"],
+            cluster_to_child={int(k): v for k, v in p["cluster_to_child"].items()},
+        )
+        for p in meta["coordinator"]["partitions"]
+    ]
+
+    # ---- bank: scatter canonical allocation-order state into THIS
+    # layout's slots (the remesh re-pack; identity when shards match)
+    alloc_ids = meta["alloc_ids"]
+    A = len(alloc_ids)
+    assert A <= bank.capacity, (A, bank.capacity)
+    old_slots = alloc_slots(A, meta["old_capacity"], meta["old_shards"])
+    new_slots = alloc_slots(A, bank.capacity, bank.n_shards)
+    bank.slot_of = {cid: int(new_slots[n]) for n, cid in enumerate(alloc_ids)}
+    bank.id_of = {s: cid for cid, s in bank.slot_of.items()}
+    bank._next = A
+    like = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct((A,) + a.shape[1:], a.dtype),
+        bank.params,
+    )
+    bank.params = scatter_allocations(
+        bank.params,
+        load_pytree(path / "bank_params.npz", like),
+        new_slots,
+        out_shardings=bank._params_sh,
+    )
+    like_o = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct((A,) + a.shape[1:], a.dtype),
+        bank.opt_state,
+    )
+    bank.opt_state = scatter_allocations(
+        bank.opt_state,
+        load_pytree(path / "bank_opt.npz", like_o),
+        new_slots,
+        out_shardings=bank._opt_sh,
+    )
+    bank.clock[new_slots] = data["bank:clock"]
+    bank.rounds[new_slots] = data["bank:rounds"]
+
+    # ---- affinity tables + client soft state
+    if eng.store is not None:
+        loaded = load_population_store(path / "store.npz")
+        remap_affinity_slots(loaded, old_slots, new_slots, bank.capacity)
+        # mutate the engine's store IN PLACE: the table/field/cache views
+        # constructed by __init__ all hold references to this object
+        adopt_store_state(eng.store, loaded)
+    else:
+        tbl = pipe.table
+        tbl.reward[:, new_slots] = data["table:reward"]
+        tbl.known[:, new_slots] = data["table:known"]
+        tbl.cluster_idx[:, new_slots] = data["table:cluster_idx"]
+        eng.fingerprint = data["fp:fingerprint"].copy()
+        eng.fp_seen = data["fp:seen"].copy()
+        eng.neg_streak = data["fp:neg"].copy()
+        pids = data["probe:ids"]
+        if pids.size:
+            eng._probe_cache.put(pids, data["probe:vals"].copy())
+
+    # ---- engine scalars
+    eng.global_mu = data["eng:global_mu"].copy()
+    eng.global_mu_seen = meta["global_mu_seen"]
+    eng.fp_beta = meta["fp_beta"]
+    eng.resource_used = meta["resource_used"]
+    eng._probe_cache_key = meta["probe_cache_key"]
+    eng.probe_train_dispatches = meta["probe_train_dispatches"]
+    eng.round_cursor = meta["next_round"]
+    eng.history = []
+    for i, h in enumerate(meta["history"]):
+        h = dict(h)
+        k = f"hist:{i}:per_client"
+        if k in data:
+            h["per_client"] = data[k].copy()
+        eng.history.append(h)
+    if meta["churn"] is not None:
+        cs = ChurnStream(**meta["churn"])
+        cs._away = data["churn:away"].copy()
+        eng.churn = cs
+    # the host RNG stream resumes EXACTLY where the saved run left it
+    # (after any init-time draws __init__ re-consumed above)
+    eng.rng.bit_generator.state = meta["rng_state"]
+
+    # ---- pipeline: counters + the staged next round
+    pipe.exec_dispatches = meta["pipeline"]["exec_dispatches"]
+    pipe.dropped_rows = meta["pipeline"]["dropped_rows"]
+    pipe.flushes = meta["pipeline"]["flushes"]
+    if staged is not None:
+        if staged["has_plan"]:
+            from repro.fl.pipeline import MatchPlan
+
+            assert pipe.exec_width == meta["exec_width"], (
+                pipe.exec_width, meta["exec_width"]
+            )
+            plan = MatchPlan(
+                round_idx=staged["round_idx"],
+                leaves=list(staged["leaves"]),
+                active=list(staged["active"]),
+                durations=dict(staged["durations"]),
+                key_seed=staged["key_seed"],
+                n_real=staged["n_real"],
+                dropped=staged["dropped"],
+                **{
+                    name: data[f"plan:{name}"].copy() for name in _PLAN_ARRAYS
+                },
+            )
+            xs = data["planbuf:xs"].copy()
+            ys = data["planbuf:ys"].copy()
+            inv = data["planbuf:inv"].copy()
+            packed = pipe._stage_buffers(plan, xs, ys, inv)
+            pipe._staged = (staged["round"], plan, packed)
+            pipe._staged_host = (xs, ys, inv)
+        else:
+            pipe._staged = (staged["round"], None, None)
+    # republish the serving snapshot from the restored bank (§⑧: the
+    # boundary state the tables are consistent with)
+    pipe.serve_params = bank.params
+    return eng

@@ -311,6 +311,10 @@ class AuxoEngine:
         # vmapped probe-train dispatch count (serving-plane tripwires: all
         # cache misses of a call must batch into ONE device dispatch)
         self.probe_train_dispatches = 0
+        # §⑨ elasticity: the next round index step() expects — advanced by
+        # step(), persisted by checkpoint.run_state.save_run and restored by
+        # load_run so a resumed driver loop knows where to continue
+        self.round_cursor = 0
         self.pipeline = RoundPipeline(self, mode=fl.execution)
 
     # -------------------------------------------------------------- views
@@ -360,6 +364,7 @@ class AuxoEngine:
             departures, arrivals = self.churn.step(r)
             self.apply_churn(departures, arrivals)
         self.pipeline.run_round(r)
+        self.round_cursor = r + 1
 
     # ------------------------------------------------------------ §⑥ churn
     def apply_churn(self, departures=(), arrivals=()):

@@ -492,6 +492,12 @@ class RoundPipeline:
         self.host_control = bool(self.overlap)
         self._inflight = None  # (plan, res) dispatched but not yet retired
         self._staged: Optional[Tuple[int, Any, Any]] = None  # (round, plan, packed)
+        # §⑨ elasticity: host copies (xs, ys, inv) of the most recent staged
+        # round's pack buffers. The device-staged tuple in _staged is
+        # layout-bound (shard-local slot ids, device placement) and cannot
+        # be serialized portably; checkpoint.run_state saves these host
+        # buffers instead and re-stages them through _stage_buffers on load.
+        self._staged_host: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = None
         self.flushes = 0  # partition-triggered pipeline flushes
         # §⑧ serving snapshot: the newest bank state CONSISTENT with the
         # host tables (round boundary). With the overlap on, the live
@@ -931,7 +937,13 @@ class RoundPipeline:
             base = jax.random.split(jax.random.key(plan.key_seed), B)
             kd = np.asarray(jax.random.key_data(base))[inv]
             return xs, ys, kd
-        return self._stage_buffers(plan, xs, ys, inv.astype(np.int32))
+        inv32 = inv.astype(np.int32)
+        if self.overlap:
+            # keep the host copies for checkpointing (§⑨): under the
+            # overlap the LAST _pack_rows call of a run_round is always the
+            # staged next round, so these buffers pair with _staged
+            self._staged_host = (xs, ys, inv32)
+        return self._stage_buffers(plan, xs, ys, inv32)
 
     def _stage_buffers(self, plan: MatchPlan, xs, ys, inv) -> tuple:
         """Place one round's row buffers on the device(s), execution-ready.
@@ -1240,11 +1252,11 @@ class RoundPipeline:
     # ------------------------------------------------------------ driver
     def _plan_and_pack(self, r: int) -> Tuple[int, Any, Any]:
         plan = self._timed("plan", self.plan_round, r)
-        packed = (
-            self._timed("pack", self._pack_rows, plan)
-            if plan is not None
-            else None
-        )
+        if plan is None:
+            if self.overlap:
+                self._staged_host = None  # no buffers ride with an empty round
+            return (r, None, None)
+        packed = self._timed("pack", self._pack_rows, plan)
         return (r, plan, packed)
 
     def _retire(self) -> bool:
@@ -1268,6 +1280,7 @@ class RoundPipeline:
         """
         if self._retire():
             self._staged = None
+            self._staged_host = None
         self.serve_params = self.bank.params
 
     def run_round(self, r: int):

@@ -295,3 +295,100 @@ def row_sharding(mesh):
     MatchPlan packing), so per-row gathers and the masked segment-sum
     aggregation never cross the mesh."""
     return NamedSharding(mesh, P("cohort"))
+
+
+# ---------------------------------------------------------------------------
+# Elastic remesh (ARCHITECTURE.md §⑨): re-pack bank slots to a new shard count
+# ---------------------------------------------------------------------------
+# The CohortBank allocates slot n -> (n % S)·slots_per_shard + n // S, so a
+# cohort's SLOT ID is a function of the shard count. Restoring a run onto a
+# different `cohort_shards` therefore permutes the live slots: the canonical
+# key that survives a remesh is the ALLOCATION index (0 = root, then
+# partition order). These helpers map allocation order <-> slot layout and
+# re-pack stacked per-slot state between layouts — the inverse discipline of
+# `spawn_children`'s scatter, with `out_shardings` (from bank_shardings /
+# bank_spec) pinning the target placement so the restored bank enters the
+# fused round step under its compile-time sharding.
+
+
+def padded_capacity(capacity: int, n_shards: int) -> int:
+    """Bank capacity after shard padding (every device owns an equal block)."""
+    n_shards = max(1, int(n_shards))
+    return -(-int(capacity) // n_shards) * n_shards
+
+
+def alloc_slots(n_alloc: int, capacity: int, n_shards: int) -> np.ndarray:
+    """Slot ids of allocations 0..n_alloc-1 under the bank's round-robin
+    placement (mirrors ``CohortBank._alloc_slot`` after shard padding).
+    Idempotent in `capacity`: padding an already-padded capacity is a no-op.
+    """
+    n_shards = max(1, int(n_shards))
+    cap = padded_capacity(capacity, n_shards)
+    assert n_alloc <= cap, (n_alloc, cap)
+    n = np.arange(int(n_alloc), dtype=np.int64)
+    if n_shards == 1:
+        return n
+    sps = cap // n_shards
+    return (n % n_shards) * sps + n // n_shards
+
+
+def repack_permutation(
+    n_alloc: int, capacity: int, old_shards: int, new_shards: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """(old_slots, new_slots): where allocation n lived under `old_shards`
+    and where it lands under `new_shards`. Both are injective (each a
+    permutation of the live allocations into their layout's slot space), so
+    a re-pack through them loses and duplicates nothing."""
+    return (
+        alloc_slots(n_alloc, capacity, old_shards),
+        alloc_slots(n_alloc, capacity, new_shards),
+    )
+
+
+def gather_allocations(tree: Any, old_slots: np.ndarray) -> Any:
+    """Canonical per-allocation view of a stacked (capacity, ...) pytree:
+    leaf[old_slots] as host numpy arrays (allocation order, layout-free)."""
+    idx = np.asarray(old_slots)
+    return jax.tree.map(lambda a: np.asarray(a)[idx], tree)
+
+
+def scatter_allocations(tree: Any, canonical: Any, new_slots, out_shardings=None):
+    """Write canonical per-allocation leaves into a stacked tree at
+    `new_slots`. With `out_shardings` (a bank_shardings pytree) the scatter
+    is jitted with the target placement PINNED — same discipline as
+    ``CohortBank.spawn_children`` — so the result's sharding cannot drift
+    from the bank's compile-time specs."""
+    idx = jnp.asarray(np.asarray(new_slots))
+
+    def fn(t, c):
+        return jax.tree.map(lambda a, v: a.at[idx].set(v), t, c)
+
+    if out_shardings is not None:
+        return jax.jit(fn, out_shardings=out_shardings)(tree, canonical)
+    return jax.jit(fn)(tree, canonical)
+
+
+def repack_stacked(
+    tree: Any,
+    capacity: int,
+    n_alloc: int,
+    old_shards: int,
+    new_shards: int,
+    out_shardings=None,
+) -> Any:
+    """Re-pack a stacked (old padded capacity, ...) pytree into the slot
+    layout of `new_shards`: gather live allocations from the old layout,
+    scatter them into a default-initialized tree of the new padded
+    capacity. Slots no allocation maps to hold zeros — exactly the state
+    of a freshly-constructed bank's unallocated slots."""
+    old_slots, new_slots = repack_permutation(
+        n_alloc, capacity, old_shards, new_shards
+    )
+    canonical = gather_allocations(tree, old_slots)
+    new_cap = padded_capacity(capacity, new_shards)
+    target = jax.tree.map(
+        lambda a: jnp.zeros((new_cap,) + np.asarray(a).shape[1:],
+                            np.asarray(a).dtype),
+        tree,
+    )
+    return scatter_allocations(target, canonical, new_slots, out_shardings)

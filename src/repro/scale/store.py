@@ -290,6 +290,57 @@ def make_client_store(
     return PopulationStore(fields, n_clients=n_clients, chunk_rows=chunk_rows)
 
 
+def remap_affinity_slots(
+    store: PopulationStore,
+    old_slots: np.ndarray,
+    new_slots: np.ndarray,
+    new_capacity: int,
+):
+    """Re-pack the affinity columns of a store to a new bank slot layout.
+
+    The reward/known/cluster_idx fields carry one column per bank slot, and
+    slot ids are a function of the shard count (ARCHITECTURE.md §⑨ remesh):
+    restoring a checkpoint onto a different ``cohort_shards`` moves live
+    column ``old_slots[i]`` to ``new_slots[i]`` and resizes the fields to
+    the new padded capacity. In-place over every materialized chunk —
+    columns no allocation maps to reset to the field default, exactly the
+    state of never-trained slots. Non-affinity fields are untouched.
+    """
+    old = np.asarray(old_slots, np.int64)
+    new = np.asarray(new_slots, np.int64)
+    assert old.shape == new.shape, (old.shape, new.shape)
+    new_capacity = int(new_capacity)
+    assert new.size == 0 or int(new.max()) < new_capacity
+    for name in ChunkedAffinityTable.FIELDS:
+        f = store._specs[name]
+        store._specs[name] = dataclasses.replace(f, shape=(new_capacity,))
+        chunks = store._chunks[name]
+        for i, ch in enumerate(chunks):
+            out = np.full((ch.shape[0], new_capacity), f.default, f.dtype)
+            out[:, new] = ch[:, old]
+            chunks[i] = out
+
+
+def adopt_store_state(dst: PopulationStore, src: PopulationStore):
+    """Move `src`'s entire state into `dst` IN PLACE.
+
+    Restore path (checkpoint.run_state): every engine-held view — the
+    ChunkedAffinityTable, ClientFields, StoreProbeCache — keeps a reference
+    to the engine's store object, so a checkpoint load must mutate that
+    object rather than swap it. The adopted field set must match what the
+    views expect (asserted for the affinity fields by the caller).
+    """
+    dst._specs = src._specs
+    dst._chunks = src._chunks
+    dst._owner = src._owner
+    dst._pages = src._pages
+    dst.n_rows = src.n_rows
+    dst.n_total = src.n_total
+    dst.n_departed = src.n_departed
+    dst.n_base = src.n_base
+    dst.chunk_rows = src.chunk_rows
+
+
 class ClientField:
     """numpy-flavored view of one store field, keyed by client id.
 

@@ -1,5 +1,189 @@
+"""sys.path setup + the shared elastic-restore differential harness.
+
+The harness (ARCHITECTURE.md §⑨) compares a run that never stopped against
+a run that checkpointed at round k, reloaded, and continued — the two must
+be BIT-EQUAL in every piece of state a round can read. ``save_run`` drains
+the §⑤ pipeline before writing, so the continuous comparator flushes at
+round k too: checkpoints happen at round boundaries, the same place
+evaluation drains the pipeline. Used by tests/test_elastic_restore.py (in
+process and from the fake-device subprocess scripts) and mirrored by
+benchmarks/elastic_restore.py.
+"""
 import os
 import sys
 
 # keep smoke tests on 1 device — ONLY the dry-run forces 512 placeholders
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# the verified scenario: 300 clients / 60 participants -> pipeline width 75.
+# Sharded runs MUST pin rows_per_shard to the full width: the default
+# per-shard row budget (ceil(2·width/S)) drops participants pre-partition
+# at S >= 4, so runs at different shard counts would diverge for capacity
+# reasons, not restore bugs.
+ELASTIC_WIDTH = 75
+
+
+def elastic_scenario(seed=5, rounds=30, plane="dense", partitions=True,
+                     **fl_kw):
+    """(task, population, fl, auxo) for the differential matrix.
+
+    `plane`: "dense" (materialized population, dense tables), "store"
+    (chunked PopulationStore backing), or "procedural" (streaming
+    §⑦ ProceduralDataPlane). Extra kwargs go to FLConfig; sharded runs get
+    ``rows_per_shard`` pinned (see ELASTIC_WIDTH).
+    """
+    from repro.data import make_population
+    from repro.data.plane import ProceduralDataPlane
+    from repro.fl import AuxoConfig, FLConfig
+    from repro.fl.task import MLPTask
+
+    if plane == "procedural":
+        pop = ProceduralDataPlane(
+            n_clients=300, n_groups=4, group_sep=0.0, dirichlet=3.0,
+            label_conflict=1.0, seed=seed,
+        )
+    else:
+        pop = make_population(
+            n_clients=300, n_groups=4, group_sep=0.0, dirichlet=3.0,
+            label_conflict=1.0, seed=seed,
+        )
+    fl_kw.setdefault("population_store", plane == "store")
+    if fl_kw.get("cohort_shards", 0) > 1:
+        fl_kw.setdefault("rows_per_shard", ELASTIC_WIDTH)
+    task = MLPTask(dim=pop.dim, n_classes=pop.n_classes)
+    fl = FLConfig(
+        rounds=rounds, participants_per_round=60, eval_every=rounds - 1,
+        use_availability=False, seed=seed, **fl_kw,
+    )
+    auxo = AuxoConfig(
+        d_sketch=64, cluster_k=2, max_cohorts=3, clustering_start_frac=0.03,
+        partition_start_frac=0.08 if partitions else 2.0,
+        partition_end_frac=0.9 if partitions else 2.0,
+        min_members=6, margin_threshold=0.35,
+    )
+    return task, pop, fl, auxo
+
+
+def engine_digest(eng, eval_round=None):
+    """Bit-comparable snapshot of everything a future round can read.
+
+    Per-cohort bank params/opt/clocks (gathered by cohort id — slot ids are
+    layout-bound and may differ across meshes), the affinity table in
+    canonical sorted-cohort-id column order (dense or store-backed), client
+    fingerprints, the probe cache, and the global duration mean. With
+    `eval_round`, also the full per-client evaluation — metrics equality is
+    part of the §⑨ contract.
+    """
+    import jax
+    import numpy as np
+
+    bank = eng.pipeline.bank
+    out = {}
+    for cid, slot in bank.slot_of.items():
+        p = jax.tree.map(lambda a: np.asarray(a)[slot], bank.params)
+        o = jax.tree.map(lambda a: np.asarray(a)[slot], bank.opt_state)
+        out[f"params:{cid}"] = np.concatenate(
+            [np.ravel(l) for l in jax.tree.leaves(p)]
+        )
+        out[f"opt:{cid}"] = np.concatenate(
+            [np.ravel(l) for l in jax.tree.leaves(o)]
+        )
+        out[f"clock:{cid}"] = np.asarray(
+            [bank.clock[slot], float(bank.rounds[slot])]
+        )
+    n = eng.data.n_clients
+    ids = np.arange(n, dtype=np.int64)
+    tbl = eng.pipeline.table
+    if hasattr(tbl, "reward"):  # dense AffinityTable
+        rw, kn, cl = tbl.reward, tbl.known, tbl.cluster_idx
+    else:  # ChunkedAffinityTable over the store
+        rw, kn, cl = tbl.to_dense(n)
+    slots = [bank.slot_of[c] for c in sorted(bank.slot_of)]
+    out["table"] = np.concatenate(
+        [
+            rw[:, slots].ravel(),
+            kn[:, slots].ravel().astype(np.float32),
+            cl[:, slots].ravel().astype(np.float32),
+        ]
+    )
+    # ClientField and plain ndarray both support fancy indexing by id
+    out["fp"] = np.concatenate(
+        [
+            np.asarray(eng.fingerprint[ids]).ravel(),
+            np.asarray(eng.fp_seen[ids]).astype(np.float32),
+            np.asarray(eng.neg_streak[ids]).astype(np.float32),
+        ]
+    )
+    if isinstance(eng._probe_cache, dict):
+        pids = np.sort(
+            np.fromiter(eng._probe_cache.keys(), np.int64,
+                        len(eng._probe_cache))
+        )
+        out["probe:ids"] = pids
+        if pids.size:
+            out["probe:vals"] = np.stack(
+                [eng._probe_cache[int(c)] for c in pids]
+            )
+    else:  # StoreProbeCache: state lives in store rows
+        out["probe:fp"] = eng.store.to_dense("probe_fp", n)
+        out["probe:seen"] = eng.store.to_dense("probe_seen", n)
+    out["mu"] = np.asarray(eng.global_mu)
+    out["leaves"] = np.frombuffer(
+        ",".join(eng.coordinator.tree.leaves()).encode(), np.uint8
+    )
+    if eval_round is not None:
+        ev = eng.evaluate(eval_round)
+        out["eval:per_client"] = np.asarray(ev["per_client"])
+        out["eval:scalars"] = np.asarray(
+            [ev["acc_mean"], ev["acc_worst10"], ev["acc_best10"],
+             ev["acc_var"], ev["time"], ev["resource"]]
+        )
+    return out
+
+
+def assert_digest_equal(da, db, ctx=""):
+    import numpy as np
+
+    assert set(da) == set(db), (ctx, set(da) ^ set(db))
+    for key in sorted(da):
+        assert np.array_equal(da[key], db[key]), (
+            f"{ctx} digest mismatch at {key!r}: "
+            f"max|diff|={np.max(np.abs(np.asarray(da[key], np.float64) - np.asarray(db[key], np.float64)))}"
+        )
+
+
+def run_continuous(k, rounds=30, plane="dense", **fl_kw):
+    """The comparator: one uninterrupted engine, pipeline flushed at round
+    k (the checkpoint boundary) and at the end."""
+    from repro.fl import AuxoEngine
+
+    task, pop, fl, auxo = elastic_scenario(rounds=rounds, plane=plane, **fl_kw)
+    eng = AuxoEngine(task, pop, fl, auxo)
+    for r in range(k):
+        eng.step(r)
+    eng.pipeline.flush()
+    for r in range(k, rounds):
+        eng.step(r)
+    eng.pipeline.flush()
+    return eng
+
+
+def run_restored(k, ckpt_dir, rounds=30, plane="dense", load_kw=None,
+                 **fl_kw):
+    """The subject: run k rounds, ``save_run``, ``load_run`` (optionally
+    onto a different mesh via load_kw={"cohort_shards": ...}), continue the
+    RERESTORED engine to the end."""
+    from repro.checkpoint import load_run, save_run
+    from repro.fl import AuxoEngine
+
+    task, pop, fl, auxo = elastic_scenario(rounds=rounds, plane=plane, **fl_kw)
+    eng = AuxoEngine(task, pop, fl, auxo)
+    for r in range(k):
+        eng.step(r)
+    save_run(ckpt_dir, eng)
+    eng = load_run(ckpt_dir, **(load_kw or {}))
+    assert eng.round_cursor == k
+    for r in range(eng.round_cursor, rounds):
+        eng.step(r)
+    eng.pipeline.flush()
+    return eng

@@ -17,6 +17,57 @@ from repro.models import build_model
 from repro.scale import make_client_store
 
 
+def test_dtype_fidelity(tmp_path):
+    """Every dtype the run stores must round-trip BIT-EXACT — bfloat16 has
+    no native npz encoding and travels as a uint16 view, restored through
+    the `like` leaf's dtype."""
+    import ml_dtypes
+
+    # uint16 included deliberately: a GENUINE uint16 leaf shares the bf16
+    # view's storage dtype, and must restore as uint16, not bfloat16
+    for dtype in (np.float32, np.float16, ml_dtypes.bfloat16, np.int32,
+                  np.uint16, np.bool_):
+        rng = np.random.default_rng(7)
+        if np.dtype(dtype) == np.bool_:
+            a = rng.random((5, 9)) < 0.5
+        elif np.issubdtype(np.dtype(dtype), np.integer):
+            a = rng.integers(0, 1000, size=(5, 9)).astype(dtype)
+        else:
+            a = rng.normal(size=(5, 9)).astype(dtype)
+        p = tmp_path / f"{np.dtype(dtype).name}.npz"
+        save_pytree(p, {"a": a})
+        back = load_pytree(p, {"a": jnp.zeros((5, 9), dtype)})
+        got = jax.tree.leaves(back)[0]
+        assert got.dtype == np.dtype(dtype), got.dtype
+        # bit-level comparison: NaN-safe, and exact for bf16 payload bits
+        width = np.dtype(dtype).itemsize
+        view = np.dtype(f"V{width}")
+        np.testing.assert_array_equal(
+            np.asarray(got).view(view), a.view(view)
+        )
+
+    # mixed-precision pytree: the bf16 leaf is stored as its uint16 view
+    # (npz has no bf16 encoding) while neighbours keep native dtypes
+    tree = {
+        "w": np.arange(6, dtype=ml_dtypes.bfloat16).reshape(2, 3),
+        "b": np.linspace(0, 1, 3, dtype=np.float32),
+    }
+    save_pytree(tmp_path / "mix.npz", tree)
+    raw = np.load(tmp_path / "mix.npz")
+    assert raw["['w']"].dtype == np.uint16
+    assert raw["['b']"].dtype == np.float32
+    like = {
+        "w": jnp.zeros((2, 3), ml_dtypes.bfloat16),
+        "b": jnp.zeros((3,), np.float32),
+    }
+    back = load_pytree(tmp_path / "mix.npz", like)
+    assert back["w"].dtype == ml_dtypes.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(back["w"]).view(np.uint16), tree["w"].view(np.uint16)
+    )
+    np.testing.assert_array_equal(np.asarray(back["b"]), tree["b"])
+
+
 def test_roundtrip(tmp_path):
     cfg = reduce_config(get_config("granite_3_2b"))
     model = build_model(cfg)
@@ -63,6 +114,68 @@ def test_population_store_roundtrip(tmp_path):
     untouched = np.setdiff1d(np.arange(2000, dtype=np.int64), ids)[:50]
     assert (loaded.rows_of(untouched) == -1).all()
     np.testing.assert_array_equal(loaded.alive(ids[:10]), np.zeros(10, bool))
+
+
+def test_population_store_churn_roundtrip(tmp_path):
+    """§⑨ regression: the churn contract survives save/load.
+
+    Departed ids must read as DEFAULTS with the departed flag remembered,
+    probe-cache drops must stay dropped, and a post-restore re-arrival must
+    cold-start exactly like a pre-save one would have."""
+    from repro.scale.store import StoreProbeCache
+
+    rng = np.random.default_rng(1)
+    store = make_client_store(50_000, d_sketch=4, capacity=3, chunk_rows=32)
+    cache = StoreProbeCache(store)
+    ids = rng.choice(50_000, size=200, replace=False).astype(np.int64)
+    store.scatter("fingerprint", ids, rng.normal(size=(200, 4)).astype(np.float32))
+    store.scatter("fp_seen", ids, True)
+    store.scatter("reward", ids, rng.normal(size=(200, 3)).astype(np.float32))
+    cache.put(ids[:50], rng.normal(size=(50, 4)).astype(np.float32))
+
+    gone, stay = ids[:30], ids[30:]
+    store.depart(gone)
+    cache.drop(gone)  # the engine invalidates probes on churn
+
+    save_population_store(tmp_path / "s.npz", store)
+    loaded = load_population_store(tmp_path / "s.npz")
+    lcache = StoreProbeCache(loaded)
+
+    # departed rows: flag remembered, every other field back at defaults
+    assert loaded.n_departed == 30
+    np.testing.assert_array_equal(loaded.alive(gone), np.zeros(30, bool))
+    np.testing.assert_array_equal(
+        loaded.gather("fingerprint", gone), np.zeros((30, 4), np.float32)
+    )
+    np.testing.assert_array_equal(
+        loaded.gather("reward", gone), np.zeros((30, 3), np.float32)
+    )
+    assert not loaded.gather("fp_seen", gone).any()
+    # probe drops survive: departed ids are missing, survivors are not
+    np.testing.assert_array_equal(lcache.missing(gone[:5]), gone[:5])
+    assert lcache.missing(ids[30:50]).size == 0
+    np.testing.assert_array_equal(
+        lcache.get_many(ids[30:50]), cache.get_many(ids[30:50])
+    )
+    # survivors read back bit-equal
+    for name in store.field_names:
+        np.testing.assert_array_equal(
+            store.gather(name, stay), loaded.gather(name, stay)
+        )
+
+    # a re-arrival AFTER restore cold-starts identically to one before a
+    # save: same flags, same defaults, same membership
+    store.arrive(gone[:10])
+    loaded.arrive(gone[:10])
+    for name in store.field_names:
+        np.testing.assert_array_equal(
+            store.gather(name, gone[:10]), loaded.gather(name, gone[:10])
+        )
+    np.testing.assert_array_equal(
+        loaded.alive(gone[:10]), np.ones(10, bool)
+    )
+    assert loaded.gather("rearrived", gone[:10]).all()
+    assert store.n_departed == loaded.n_departed == 20
 
 
 def test_data_plane_spec_roundtrip(tmp_path):

@@ -1,0 +1,269 @@
+"""Elastic runs: whole-run checkpoint/restore proven by bit-equality
+(ARCHITECTURE.md §⑨, checkpoint/run_state.py).
+
+Differential harness (helpers in conftest.py): run K rounds, ``save_run``,
+``load_run``, continue — final bank params + opt state, clocks, affinity
+tables, fingerprints, probe caches, AND evaluation metrics must be
+BIT-EQUAL to a run that never stopped. The continuous comparator flushes
+its pipeline at the save round (checkpoints happen at round boundaries,
+where evaluation drains the pipeline too).
+
+Matrix: dense / chunked-PopulationStore / procedural data plane ×
+``round_overlap`` 0 and 1 × save points with cohort partitions BEFORE and
+AFTER the checkpoint. Remesh (save at cohort_shards=2, restore onto 4 and
+down onto 1) and the sharded C=32 case need fake host devices, so they run
+in subprocesses with XLA_FLAGS set before jax initializes — marked slow
+like test_cohort_sharding's equivalence test.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from conftest import (
+    assert_digest_equal,
+    elastic_scenario,
+    engine_digest,
+    run_continuous,
+    run_restored,
+)
+
+ROUNDS = 30
+
+# (plane, round_overlap, save round). With partition_start_frac=0.08 the
+# first partition lands around round 3 and the second (max_cohorts=3)
+# later: k=6 checkpoints with a partition still to come (restore must
+# handle a LATER topology change), k=20 checkpoints after the tree is
+# fully grown (restore must carry the grown bank/tables).
+MATRIX = [
+    ("dense", 0, 6),
+    ("dense", 0, 20),
+    ("dense", 1, 6),
+    ("dense", 1, 20),
+    ("store", 0, 20),
+    ("store", 1, 6),
+    ("procedural", 0, 6),
+    ("procedural", 1, 20),
+]
+
+
+@pytest.mark.parametrize("plane,overlap,k", MATRIX)
+def test_restore_bit_equal(plane, overlap, k, tmp_path):
+    a = run_continuous(k, rounds=ROUNDS, plane=plane, round_overlap=overlap)
+    b = run_restored(
+        k, tmp_path / "ckpt", rounds=ROUNDS, plane=plane,
+        round_overlap=overlap,
+    )
+    da = engine_digest(a, eval_round=ROUNDS - 1)
+    db = engine_digest(b, eval_round=ROUNDS - 1)
+    assert_digest_equal(da, db, ctx=f"plane={plane} overlap={overlap} k={k}")
+    # the matrix is only meaningful if partitions really straddle the save
+    # point: every cell must grow cohorts, and the k values must land one
+    # partition on each side
+    parts = [p.round_idx for p in a.coordinator.partitions]
+    assert len(a.coordinator.tree.leaves()) >= 2, parts
+    if k == 6:
+        assert any(r >= k for r in parts), (k, parts)
+    else:
+        assert any(r < k for r in parts), (k, parts)
+
+
+def test_round_cursor_and_history_roundtrip(tmp_path):
+    """The resume contract: load_run hands back the round to run next, and
+    recorded eval history (incl. per-client arrays) survives."""
+    from repro.checkpoint import load_run, save_run
+    from repro.fl import AuxoEngine
+
+    task, pop, fl, auxo = elastic_scenario(rounds=12)
+    eng = AuxoEngine(task, pop, fl, auxo)
+    for r in range(5):
+        eng.step(r)
+    eng.history.append(eng.evaluate(4))
+    save_run(tmp_path / "c", eng)
+    back = load_run(tmp_path / "c")
+    assert back.round_cursor == 5
+    assert len(back.history) == 1
+    h0, h1 = eng.history[0], back.history[0]
+    np.testing.assert_array_equal(h0["per_client"], h1["per_client"])
+    assert h0["acc_mean"] == h1["acc_mean"]
+    assert h0["cohort_accs"] == h1["cohort_accs"]
+
+
+def test_staged_plan_blocks_remesh(tmp_path):
+    """A checkpoint holding a staged §⑤ plan is layout-bound: restoring it
+    onto a different cohort_shards must refuse loudly — and the SAME-layout
+    restore of that very checkpoint must re-stage the plan."""
+    from repro.checkpoint import load_run, save_run
+    from repro.fl import AuxoEngine
+
+    task, pop, fl, auxo = elastic_scenario(
+        rounds=12, round_overlap=1, partitions=False,
+    )
+    eng = AuxoEngine(task, pop, fl, auxo)
+    for r in range(4):
+        eng.step(r)
+    save_run(tmp_path / "c", eng)
+    assert eng.pipeline._staged is not None  # flush kept the staged plan
+    with pytest.raises(ValueError, match="layout-bound"):
+        load_run(tmp_path / "c", cohort_shards=2)
+    back = load_run(tmp_path / "c")
+    assert back.pipeline._staged is not None
+    assert back.pipeline._staged[1] is not None  # a real plan, re-staged
+    assert back.pipeline._staged[0] == back.round_cursor
+
+
+def test_opaque_plane_requires_population(tmp_path):
+    """A hand-built population has no recipe: load_run refuses without
+    population=, and continues bit-equal with it."""
+    from repro.data import FederatedClassification, make_population
+    from repro.checkpoint import load_run, save_run
+    from repro.fl import AuxoConfig, AuxoEngine, FLConfig
+    from repro.fl.task import MLPTask
+
+    pop = make_population(n_clients=80, n_groups=2, seed=3)
+    bare = FederatedClassification(
+        clients=pop.clients, test_x=pop.test_x, test_y=pop.test_y,
+        n_classes=pop.n_classes, dim=pop.dim, n_groups=pop.n_groups,
+    )
+    task = MLPTask(dim=pop.dim, n_classes=pop.n_classes)
+    fl = FLConfig(rounds=4, participants_per_round=20,
+                  use_availability=False, seed=3)
+    auxo = AuxoConfig(max_cohorts=2, clustering_start_frac=0.0)
+    eng = AuxoEngine(task, bare, fl, auxo)
+    eng.step(0)
+    eng.step(1)
+    save_run(tmp_path / "c", eng)
+    with pytest.raises(ValueError, match="population"):
+        load_run(tmp_path / "c")
+    back = load_run(tmp_path / "c", population=bare)
+    eng.pipeline.flush()
+    eng.step(2)
+    back.step(2)
+    eng.pipeline.flush()
+    back.pipeline.flush()
+    assert_digest_equal(engine_digest(eng), engine_digest(back))
+
+
+# ---------------------------------------------------------------------------
+# remesh + sharded cases: fake host devices => subprocess (slow)
+# ---------------------------------------------------------------------------
+_SUBPROCESS_PRELUDE = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, "src")
+    sys.path.insert(0, "tests")
+    sys.path.insert(0, "benchmarks")
+    import tempfile
+    import numpy as np
+    from conftest import (
+        assert_digest_equal, elastic_scenario, engine_digest,
+        run_continuous, run_restored,
+    )
+    """
+)
+
+_SUBPROCESS_REMESH = _SUBPROCESS_PRELUDE + textwrap.dedent(
+    """
+    K, R = 8, 24
+    # comparator: uninterrupted at the TARGET shard count
+    cont4 = run_continuous(K, rounds=R, cohort_shards=4)
+    # subject: save on a 2-shard mesh, restore onto 4 shards
+    d = tempfile.mkdtemp()
+    up = run_restored(K, d, rounds=R, cohort_shards=2,
+                      load_kw={"cohort_shards": 4})
+    assert up.pipeline.bank.n_shards == 4
+    assert_digest_equal(engine_digest(cont4, eval_round=R - 1),
+                        engine_digest(up, eval_round=R - 1), ctx="2->4")
+    # and DOWN onto a single device from the same checkpoint
+    from repro.checkpoint import load_run
+    down = load_run(d, cohort_shards=1)
+    assert down.pipeline.bank.n_shards == 1
+    for r in range(down.round_cursor, R):
+        down.step(r)
+    down.pipeline.flush()
+    cont1 = run_continuous(K, rounds=R, cohort_shards=0,
+                           rows_per_shard=75)
+    assert_digest_equal(engine_digest(cont1, eval_round=R - 1),
+                        engine_digest(down, eval_round=R - 1), ctx="2->1")
+    print("REMESH OK", len(up.coordinator.tree.leaves()))
+    """
+)
+
+_SUBPROCESS_C32 = _SUBPROCESS_PRELUDE + textwrap.dedent(
+    """
+    import tempfile
+    from repro.checkpoint import load_run, save_run
+    from repro.data import make_population
+    from repro.fl import AuxoConfig, AuxoEngine, FLConfig
+    from repro.fl.task import MLPTask
+    from round_latency import force_leaves
+
+    def mk():
+        pop = make_population(n_clients=800, n_groups=8, group_sep=0.0,
+                              dirichlet=2.0, label_conflict=0.6, seed=13)
+        task = MLPTask(dim=pop.dim, n_classes=pop.n_classes)
+        fl = FLConfig(rounds=5, participants_per_round=128,
+                      use_availability=False, seed=13, cohort_shards=8)
+        auxo = AuxoConfig(d_sketch=32, cluster_k=2, max_cohorts=32,
+                          clustering_start_frac=0.0, partition_start_frac=2.0,
+                          partition_end_frac=2.0)
+        eng = AuxoEngine(task, pop, fl, auxo)
+        force_leaves(eng, 32)
+        return eng
+
+    K, R = 2, 4
+    cont = mk()
+    for r in range(K):
+        cont.step(r)
+    cont.pipeline.flush()
+    for r in range(K, R):
+        cont.step(r)
+    cont.pipeline.flush()
+
+    sub = mk()
+    for r in range(K):
+        sub.step(r)
+    d = tempfile.mkdtemp()
+    save_run(d, sub)
+    sub = load_run(d)
+    assert sub.pipeline.bank.n_shards == 8
+    assert len(sub.coordinator.tree.leaves()) == 32
+    for r in range(sub.round_cursor, R):
+        sub.step(r)
+    sub.pipeline.flush()
+    assert_digest_equal(engine_digest(cont), engine_digest(sub), ctx="C32")
+    print("C32 OK")
+    """
+)
+
+
+def _run_sub(script):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out = subprocess.run(
+        [sys.executable, "-c", script], cwd=repo, env=env,
+        capture_output=True, text=True, timeout=900,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    return out.stdout
+
+
+@pytest.mark.slow
+def test_remesh_2_to_4_and_down_to_1_bit_equal():
+    """Save on a 2-shard cohort mesh, restore onto 4 shards (and down onto
+    1): the re-packed run continues bit-equal to a run that lived on the
+    target mesh the whole time (§⑨ acceptance)."""
+    assert "REMESH OK" in _run_sub(_SUBPROCESS_REMESH)
+
+
+@pytest.mark.slow
+def test_c32_sharded_restore_bit_equal_on_8_fake_devices():
+    """C = 32 on an 8-device mesh: a mid-run save/load continues bit-equal
+    to the uninterrupted sharded run."""
+    assert "C32 OK" in _run_sub(_SUBPROCESS_C32)

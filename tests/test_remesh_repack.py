@@ -1,0 +1,90 @@
+"""Property tests for the §⑨ remesh slot re-pack (launch/sharding).
+
+The elastic-restore contract rests on three algebraic facts about the
+allocation-order <-> slot-layout maps: ``alloc_slots`` is injective into
+the padded slot space (a re-pack loses and duplicates nothing), the
+re-pack composes to the identity (A -> B -> A round-trips), and every
+allocation carries its per-slot values verbatim between layouts.
+Hypothesis searches the (capacity, shard-count, live-count) space for
+counterexamples; CI installs hypothesis, locally the module skips if the
+dependency is absent.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.launch.sharding import (  # noqa: E402
+    alloc_slots,
+    gather_allocations,
+    padded_capacity,
+    repack_permutation,
+    repack_stacked,
+)
+
+capacities = st.integers(min_value=1, max_value=96)
+shard_counts = st.integers(min_value=1, max_value=12)
+
+
+@given(cap=capacities, s=shard_counts)
+@settings(max_examples=60, deadline=None)
+def test_alloc_slots_is_a_permutation(cap, s):
+    """Full occupancy: the allocation map is a bijection onto the padded
+    slot space — no slot lost, none assigned twice."""
+    n = padded_capacity(cap, s)
+    slots = alloc_slots(n, cap, s)
+    assert slots.shape == (n,)
+    assert slots.min() >= 0 and slots.max() < n
+    assert np.unique(slots).size == n
+    # idempotent in padding: feeding the padded capacity back changes nothing
+    np.testing.assert_array_equal(slots, alloc_slots(n, n, s))
+
+
+@given(cap=capacities, s=shard_counts, data=st.data())
+@settings(max_examples=60, deadline=None)
+def test_alloc_slots_partial_is_injective_and_prefix_stable(cap, s, data):
+    """Partial occupancy (the real mid-run case): still injective, and a
+    PREFIX of a fuller layout — growing the bank never moves a live slot."""
+    n_max = padded_capacity(cap, s)
+    n = data.draw(st.integers(min_value=0, max_value=n_max), label="n_alloc")
+    slots = alloc_slots(n, cap, s)
+    assert np.unique(slots).size == n
+    np.testing.assert_array_equal(slots, alloc_slots(n_max, cap, s)[:n])
+
+
+@given(cap=capacities, a=shard_counts, b=shard_counts, data=st.data())
+@settings(max_examples=60, deadline=None)
+def test_repack_round_trips_and_preserves_values(cap, a, b, data):
+    """A -> B moves every allocation's row intact; A -> B -> A is the
+    identity (dead slots are zero on both sides, like a fresh bank's)."""
+    n_max = min(padded_capacity(cap, a), padded_capacity(cap, b))
+    n = data.draw(st.integers(min_value=0, max_value=n_max), label="n_alloc")
+    old_slots, new_slots = repack_permutation(n, cap, a, b)
+
+    cap_a = padded_capacity(cap, a)
+    tree = {
+        "w": np.zeros((cap_a, 2), np.float32),
+        "c": np.zeros((cap_a,), np.int32),
+    }
+    # distinct payload per live allocation, zeros in dead slots
+    tree["w"][old_slots] = np.arange(1, n + 1, dtype=np.float32)[:, None]
+    tree["c"][old_slots] = np.arange(1, n + 1, dtype=np.int32)
+
+    moved = {k: np.asarray(v) for k, v in repack_stacked(tree, cap, n, a, b).items()}
+    assert moved["w"].shape == (padded_capacity(cap, b), 2)
+    # per-allocation value preservation, via the canonical gather
+    np.testing.assert_array_equal(
+        gather_allocations(moved, new_slots)["w"],
+        gather_allocations(tree, old_slots)["w"],
+    )
+    np.testing.assert_array_equal(
+        gather_allocations(moved, new_slots)["c"],
+        gather_allocations(tree, old_slots)["c"],
+    )
+    # nothing leaked into dead slots
+    assert float(np.abs(moved["w"]).sum()) == float(np.abs(tree["w"]).sum())
+
+    back = repack_stacked(moved, cap, n, b, a)
+    np.testing.assert_array_equal(np.asarray(back["w"]), tree["w"])
+    np.testing.assert_array_equal(np.asarray(back["c"]), tree["c"])
